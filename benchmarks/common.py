@@ -1,0 +1,66 @@
+"""Shared benchmark scaffolding: suite/predictor construction, CSV output.
+
+Every module prints ``name,value,derived`` CSV rows (one per paper
+table/figure datapoint) and returns a dict for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+N_MIXES = int(os.environ.get("REPRO_BENCH_MIXES", "8"))
+DRYRUN_JSON = os.path.join(RESULTS_DIR, "dryrun_baseline.json")
+
+_cache: Dict[str, object] = {}
+
+
+def get_suite():
+    if "suite" not in _cache:
+        from repro.core import (ANNPredictor, MoEPredictor, spark_sim_suite,
+                                training_apps)
+        apps = spark_sim_suite()
+        train = training_apps(apps)
+        moe = MoEPredictor().fit(train)
+        ann = ANNPredictor().fit(train)
+        _cache["suite"] = (apps, train, moe, ann)
+    return _cache["suite"]
+
+
+def get_policies():
+    from repro.core import make_policies
+    apps, train, moe, ann = get_suite()
+    return make_policies(moe, ann)
+
+
+def load_dryrun() -> Optional[dict]:
+    if os.path.exists(DRYRUN_JSON):
+        with open(DRYRUN_JSON) as f:
+            return json.load(f)
+    return None
+
+
+def emit(name: str, value, derived: str = ""):
+    print(f"{name},{value},{derived}")
+
+
+def save_result(bench: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"bench_{bench}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)  # warmup
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

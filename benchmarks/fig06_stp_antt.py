@@ -1,0 +1,60 @@
+"""Paper Fig. 6: normalized STP (a) and ANTT reduction (b) across runtime
+scenarios L1..L10 for OURS / QUASAR / PAIRWISE / ONLINE / ORACLE."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import N_MIXES, emit, get_policies, get_suite, \
+    save_result
+from repro.core.metrics import SCENARIOS, run_all_scenarios
+
+
+def main() -> dict:
+    apps, _, _, _ = get_suite()
+    pols = get_policies()
+    factories = {n: (lambda mix, p=p: p) for n, p in pols.items()}
+    res = run_all_scenarios(apps, factories, n_mixes=N_MIXES, seed=0)
+
+    payload = {}
+    for pol in res:
+        per_sc = res[pol]
+        stps = [per_sc[sc].stp_gmean for sc in SCENARIOS]
+        reds = [per_sc[sc].antt_reduction_mean for sc in SCENARIOS]
+        payload[pol] = {
+            "stp_per_scenario": dict(zip(SCENARIOS, stps)),
+            "antt_reduction_per_scenario": dict(zip(SCENARIOS, reds)),
+            "stp_min": {sc: per_sc[sc].stp_min for sc in SCENARIOS},
+            "stp_max": {sc: per_sc[sc].stp_max for sc in SCENARIOS},
+            "stp_avg": float(np.mean(stps)),
+            "antt_reduction_avg": float(np.mean(reds)),
+        }
+        for sc in SCENARIOS:
+            emit(f"fig06_stp_{pol}_{sc}", round(per_sc[sc].stp_gmean, 3),
+                 f"min={per_sc[sc].stp_min:.2f};max={per_sc[sc].stp_max:.2f}")
+        emit(f"fig06_stp_avg_{pol}", round(float(np.mean(stps)), 3))
+        emit(f"fig06_anttred_avg_{pol}",
+             round(float(np.mean(reds)) * 100, 1), "percent")
+
+    ours, oracle = payload["ours"], payload["oracle"]
+    quasar, pairwise = payload["quasar"], payload["pairwise"]
+    derived = {
+        "ours_stp_avg": ours["stp_avg"],
+        "ours_frac_of_oracle_stp": ours["stp_avg"] / oracle["stp_avg"],
+        "ours_over_quasar_stp": ours["stp_avg"] / quasar["stp_avg"],
+        "ours_over_pairwise_stp": ours["stp_avg"] / pairwise["stp_avg"],
+        "ours_antt_reduction_avg": ours["antt_reduction_avg"],
+        "paper_claims": {
+            "stp_avg": 8.69, "frac_of_oracle": 0.839,
+            "over_quasar": 1.28, "antt_reduction": 0.49},
+    }
+    emit("fig06_ours_frac_of_oracle",
+         round(derived["ours_frac_of_oracle_stp"], 3), "paper: 0.839")
+    emit("fig06_ours_antt_reduction",
+         round(derived["ours_antt_reduction_avg"], 3), "paper: 0.49")
+    payload["derived"] = derived
+    save_result("fig06", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Fig. 7/8: CPU utilization trace + makespan for one 30-app (L10)
+mix under each policy — ours should show the highest utilization and the
+fastest completion."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_policies, get_suite, save_result
+from repro.core.metrics import make_mix
+from repro.core.simulator import SimConfig, Simulator
+
+
+def main() -> dict:
+    apps, _, _, _ = get_suite()
+    pols = get_policies()
+    payload = {n: {"mean_turnaround": [], "mean_utilization": [],
+                   "stp": []} for n in ("ours", "quasar", "pairwise")}
+    for mix in range(4):
+        rng = np.random.default_rng([0, mix, 30])
+        jobs = make_mix(apps, 30, rng)
+        for name in payload:
+            sim = Simulator(jobs, pols[name], SimConfig(), seed=mix)
+            out = sim.run()
+            trace = np.asarray(out["util_trace"])
+            t, u = trace[:, 0], trace[:, 1]
+            dt = np.diff(t, append=t[-1])
+            payload[name]["mean_turnaround"].append(
+                float(np.mean(out["c_cl"])))
+            payload[name]["mean_utilization"].append(
+                float(np.sum(u * dt) / max(np.sum(dt), 1e-9)))
+            payload[name]["stp"].append(out["stp"])
+    for name, v in payload.items():
+        for key in list(v):
+            v[key] = float(np.mean(v[key]))
+        emit(f"fig07_mean_util_{name}", round(v["mean_utilization"], 3))
+        emit(f"fig07_turnaround_{name}", round(v["mean_turnaround"], 1))
+    payload["derived"] = {
+        # paper Fig.8: turnaround time to finish the job set
+        "ours_turnaround_speedup_vs_pairwise":
+            payload["pairwise"]["mean_turnaround"]
+            / payload["ours"]["mean_turnaround"],
+        "ours_turnaround_speedup_vs_quasar":
+            payload["quasar"]["mean_turnaround"]
+            / payload["ours"]["mean_turnaround"],
+        "paper_claims": {"vs_pairwise": 1.46, "vs_quasar": 1.28},
+    }
+    emit("fig08_turnaround_vs_pairwise",
+         round(payload["derived"]["ours_turnaround_speedup_vs_pairwise"],
+               2), "paper: 1.46")
+    emit("fig08_turnaround_vs_quasar",
+         round(payload["derived"]["ours_turnaround_speedup_vs_quasar"], 2),
+         "paper: 1.28")
+    save_result("fig07", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

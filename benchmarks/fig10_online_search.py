@@ -1,0 +1,36 @@
+"""Paper Fig. 10: ours vs online descent-search input-size allocation
+(search overhead makes it ~2.4x/2.6x worse on STP/ANTT)."""
+from __future__ import annotations
+
+from benchmarks.common import N_MIXES, emit, get_policies, get_suite, \
+    save_result
+from repro.core.metrics import run_scenario
+
+
+def main() -> dict:
+    apps, _, _, _ = get_suite()
+    pols = get_policies()
+    payload = {}
+    for name in ("ours", "online"):
+        r = run_scenario(apps, lambda mix, p=pols[name]: p, n_jobs=13,
+                         n_mixes=N_MIXES, seed=2)
+        payload[name] = {"stp": r.stp_gmean,
+                         "antt": r.antt_gmean,
+                         "antt_reduction": r.antt_reduction_mean}
+        emit(f"fig10_stp_{name}", round(r.stp_gmean, 3))
+    payload["derived"] = {
+        "ours_over_online_stp":
+            payload["ours"]["stp"] / payload["online"]["stp"],
+        "ours_over_online_antt":
+            payload["online"]["antt"] / payload["ours"]["antt"],
+        "paper_claims": {"stp": 2.4, "antt": 2.6},
+    }
+    emit("fig10_ours_over_online_stp",
+         round(payload["derived"]["ours_over_online_stp"], 2),
+         "paper: 2.4")
+    save_result("fig10", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig. 13: CPU load distribution in isolation (mostly < 40%) —
+the headroom co-location exploits."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_suite, save_result
+
+
+def main() -> dict:
+    apps, _, _, _ = get_suite()
+    loads = np.asarray([a.cpu_load for a in apps])
+    payload = {
+        "mean": float(loads.mean()),
+        "median": float(np.median(loads)),
+        "p90": float(np.percentile(loads, 90)),
+        "frac_under_40pct": float(np.mean(loads < 0.4)),
+        "per_app": {a.name: a.cpu_load for a in apps},
+    }
+    emit("fig13_mean_load", round(payload["mean"], 3),
+         "paper: averaged CPU load under 40%")
+    emit("fig13_frac_under_40pct", round(payload["frac_under_40pct"], 3))
+    save_result("fig13", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

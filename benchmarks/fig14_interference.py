@@ -1,0 +1,48 @@
+"""Paper Fig. 14: slowdown distribution when co-locating each training
+benchmark with every other app under OUR scheme (paper: <25%, avg <10%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_suite, save_result
+from repro.core.simulator import OursPolicy, SimConfig, Simulator
+from repro.core.workloads import training_apps
+
+
+def main() -> dict:
+    apps, train, moe, _ = get_suite()
+    cfg = SimConfig()
+    slowdowns = {}
+    items = 30.0  # ~280 GB-class inputs in the paper's experiment
+    for target in train:
+        sds = []
+        # baseline: target alone
+        solo = Simulator([(target, items)], OursPolicy(moe), cfg, seed=0)
+        c_solo = solo.run()["c_cl"][0]
+        for other in apps:
+            if other.name == target.name:
+                continue
+            sim = Simulator([(target, items), (other, items)],
+                            OursPolicy(moe), cfg, seed=0)
+            out = sim.run()
+            sds.append(out["c_cl"][0] / max(c_solo, 1e-9) - 1.0)
+        slowdowns[target.name] = {
+            "median": float(np.median(sds)),
+            "p95": float(np.percentile(sds, 95)),
+            "max": float(np.max(sds)),
+        }
+    med = float(np.mean([v["median"] for v in slowdowns.values()]))
+    worst = float(np.max([v["max"] for v in slowdowns.values()]))
+    payload = {"per_target": slowdowns,
+               "avg_median_slowdown": med, "worst_slowdown": worst,
+               "paper_claims": {"avg": 0.10, "max": 0.25}}
+    emit("fig14_avg_median_slowdown", round(med * 100, 1),
+         "percent; paper: <10")
+    emit("fig14_worst_slowdown", round(worst * 100, 1),
+         "percent; paper: <25")
+    save_result("fig14", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Fig. 16 / Section 6.9: the 44 benchmarks form 3 clusters in
+PCA-projected feature space, each mapped to one memory function family;
+within-cluster correlation to the center > 0.9999."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_suite, save_result
+from repro.core.pca import PCA, Scaler
+
+
+def main() -> dict:
+    apps, train, moe, _ = get_suite()
+    X = np.asarray([a.features for a in apps])
+    scaler = Scaler.fit(X)
+    pca = PCA.fit(scaler.transform(X), n_components=2)
+    Z = pca.transform(scaler.transform(X))
+    fams = np.asarray([a.family for a in apps])
+    payload = {"clusters": {}}
+    purity_ok = True
+    for fam in np.unique(fams):
+        pts = Z[fams == fam]
+        center = pts.mean(axis=0)
+        # pearson correlation of each point with its cluster center
+        corrs = []
+        for p in pts:
+            denom = (np.linalg.norm(p - p.mean())
+                     * np.linalg.norm(center - center.mean()))
+            if denom < 1e-12:
+                corrs.append(1.0)
+            else:
+                corrs.append(float(
+                    np.dot(p - p.mean(), center - center.mean()) / denom))
+        # cluster tightness: max in-cluster distance vs distance to the
+        # nearest other cluster center
+        others = [Z[fams == f].mean(axis=0) for f in np.unique(fams)
+                  if f != fam]
+        sep = min(np.linalg.norm(center - o) for o in others)
+        radius = float(np.max(np.linalg.norm(pts - center, axis=1)))
+        payload["clusters"][fam] = {
+            "n": int((fams == fam).sum()),
+            "min_corr": float(np.min(corrs)),
+            "radius": radius, "separation": float(sep),
+        }
+        purity_ok &= radius < sep
+        emit(f"fig16_cluster_{fam}", int((fams == fam).sum()),
+             f"min_corr={np.min(corrs):.4f};r/sep={radius/sep:.2f}")
+    # selector accuracy over all 44 (the clusters are why KNN works)
+    acc = np.mean([moe.select_family(a.features)[0] == a.family
+                   for a in apps])
+    payload["selector_accuracy"] = float(acc)
+    payload["clusters_separable"] = bool(purity_ok)
+    emit("fig16_selector_accuracy", round(float(acc), 4), "paper: 0.974")
+    save_result("fig16", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

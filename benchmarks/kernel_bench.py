@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks. NOTE: interpret=True on CPU measures the
+python-level Pallas simulator — correctness-scale numbers only; real-TPU
+timing requires hardware. The XLA-reference timings below are the
+meaningful CPU datapoints (kernel wrappers vs jnp oracles)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_result, timed
+
+
+def main() -> dict:
+    rng = np.random.default_rng(0)
+    payload = {}
+
+    # flash attention: oracle XLA path at a few sizes
+    from repro.kernels.flash_attention.ref import attention_ref
+    import jax
+    ref_j = jax.jit(lambda q, k, v: attention_ref(q, k, v, scale=0.125))
+    for S in (128, 256, 512):
+        q = jnp.asarray(rng.normal(0, 1, (1, 4, S, 64)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (1, 2, S, 64)), jnp.float32)
+        v = jnp.asarray(rng.normal(0, 1, (1, 2, S, 64)), jnp.float32)
+        t = timed(lambda: jax.block_until_ready(ref_j(q, k, v)))
+        flops = 4 * 1 * 4 * S * S * 64
+        payload[f"attn_ref_S{S}"] = {"us": t * 1e6,
+                                     "gflops": flops / t / 1e9}
+        emit(f"kernel_attn_ref_S{S}", round(t * 1e6, 1),
+             f"us_per_call;gflops={flops / t / 1e9:.1f}")
+
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    ssd_j = jax.jit(lambda *a: ssd_scan_ref(*a, chunk=64))
+    for S in (256, 1024):
+        xb = jnp.asarray(rng.normal(0, .5, (1, S, 8, 64)), jnp.float32)
+        a = jnp.asarray(-np.abs(rng.normal(0, .3, (1, S, 8))), jnp.float32)
+        B = jnp.asarray(rng.normal(0, .5, (1, S, 1, 64)), jnp.float32)
+        C = jnp.asarray(rng.normal(0, .5, (1, S, 1, 64)), jnp.float32)
+        t = timed(lambda: jax.block_until_ready(ssd_j(xb, a, B, C)))
+        payload[f"ssd_ref_S{S}"] = {"us": t * 1e6}
+        emit(f"kernel_ssd_ref_S{S}", round(t * 1e6, 1), "us_per_call")
+
+    # interpret-mode Pallas (correctness-scale only)
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    x = jnp.asarray(rng.normal(0, 1, (256, 512)), jnp.float32)
+    w = jnp.ones((512,), jnp.float32)
+    t = timed(lambda: jax.block_until_ready(rmsnorm(x, w, blk=128)))
+    payload["rmsnorm_interpret"] = {"us": t * 1e6}
+    emit("kernel_rmsnorm_interpret", round(t * 1e6, 1),
+         "us_per_call;python-simulated, not TPU perf")
+    save_result("kernels", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+``python -m benchmarks.run``              runs everything
+``python -m benchmarks.run --bench fig06 roofline``  subset
+
+Prints ``name,value,derived`` CSV rows; per-bench JSON lands in results/.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+BENCHES = [
+    "fig06_stp_antt",      # main result: STP/ANTT L1..L10, 5 policies
+    "fig07_utilization",   # utilization trace + makespan, L10 mix
+    "fig09_unified",       # MoE vs unified single-model predictors
+    "fig10_online_search",  # vs descent-search allocation
+    "fig11_overhead",      # profiling overhead fractions
+    "fig13_cpu_load",      # isolation CPU load distribution
+    "fig14_interference",  # pairwise co-location slowdown distribution
+    "fig16_clusters",      # PCA cluster structure + selector accuracy
+    "fig17_accuracy",      # LOOCV memory prediction error
+    "table5_classifiers",  # alternative expert selectors
+    "roofline",            # dry-run roofline table (all cells)
+    "kernel_bench",        # kernel wrappers (interpret-mode) + XLA refs
+    "tpu_colocation",      # beyond-paper: TPU-jobs universe
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", nargs="*", default=None,
+                    help="prefixes of benchmarks to run")
+    args = ap.parse_args()
+    todo = BENCHES if not args.bench else [
+        b for b in BENCHES if any(b.startswith(p) for p in args.bench)]
+    failures = []
+    for name in todo:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""The paper, end to end: learn the mixture-of-experts memory predictor
+offline, then schedule a mixed batch of Spark-sim applications with every
+co-location policy and compare STP / ANTT.
+
+    PYTHONPATH=src python examples/colocation_demo.py --jobs 13 --mixes 5
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import (ANNPredictor, MoEPredictor, make_policies,
+                        spark_sim_suite, training_apps)
+from repro.core.metrics import run_scenario
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=13)
+    ap.add_argument("--mixes", type=int, default=5)
+    ap.add_argument("--hosts", type=int, default=40)
+    args = ap.parse_args()
+
+    apps = spark_sim_suite()
+    train = training_apps(apps)
+    print(f"suite: {len(apps)} applications "
+          f"({len(train)} HiBench/BigDataBench training apps)")
+
+    moe = MoEPredictor().fit(train)
+    print("\nexpert selection (KNN over PCA'd runtime features):")
+    fams = {}
+    for app in apps:
+        fam, dist, conf = moe.select_family(app.features)
+        fams.setdefault(fam, []).append(app.name)
+        assert conf
+    for fam, names in fams.items():
+        print(f"  {fam:16s}: {len(names)} apps (e.g. {names[:3]})")
+
+    rng = np.random.default_rng(0)
+    errs = []
+    for app in apps:
+        fn, _ = moe.predict_function(app, 1000.0, rng)
+        t = app.true_fn(1000.0)
+        errs.append(abs(float(fn(1000.0)) - t) / t)
+    print(f"\nmemory prediction error: mean {np.mean(errs)*100:.1f}%  "
+          f"max {np.max(errs)*100:.1f}%   (paper: ~5% mean)")
+
+    ann = ANNPredictor().fit(train)
+    pols = make_policies(moe, ann)
+    from repro.core.simulator import SimConfig
+    cfg = SimConfig(n_hosts=args.hosts)
+    print(f"\nscheduling {args.jobs} jobs on {args.hosts} hosts "
+          f"({args.mixes} random mixes):")
+    print(f"{'policy':10s} {'STP':>7s} {'ANTT-red':>9s} {'OOM':>5s}")
+    rows = {}
+    for name, pol in pols.items():
+        r = run_scenario(apps, lambda m, p=pol: p, n_jobs=args.jobs,
+                         n_mixes=args.mixes, cfg=cfg, seed=0)
+        rows[name] = r
+        print(f"{name:10s} {r.stp_gmean:7.2f} "
+              f"{r.antt_reduction_mean*100:8.1f}% {r.oom_total:5d}")
+    frac = rows["ours"].stp_gmean / rows["oracle"].stp_gmean
+    print(f"\nours = {frac*100:.1f}% of Oracle STP (paper: 83.9%)")
+
+
+if __name__ == "__main__":
+    main()

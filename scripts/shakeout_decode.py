@@ -1,0 +1,43 @@
+"""Verify: prefill(t[:k]) + decode(t[k:]) logits == full forward logits."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model
+
+failures = []
+for arch in ["qwen3-14b", "gemma2-27b", "qwen3-moe-30b-a3b",
+             "mamba2-780m", "zamba2-2.7b", "whisper-large-v3"]:
+    cfg = get_config(arch, smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    params = model.init(cfg, jax.random.key(1))
+    rng = np.random.default_rng(0)
+    B, S, K = 2, 16, 10  # prefill first K, decode the rest
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    batch = {"tokens": tokens}
+    if cfg.family == "encdec":
+        enc = jnp.asarray(rng.normal(0, 0.1, (B, 8, cfg.d_model)), jnp.float32)
+        batch["enc_embeds"] = enc
+
+    # full forward logits at each position
+    h, _ = model.forward_train(params, cfg, batch)
+    full_logits = model.lm_logits(params, cfg, h)  # [B, S, V]
+
+    pb = dict(batch)
+    pb["tokens"] = tokens[:, :K]
+    last, cache = model.prefill(params, cfg, pb, max_len=S + 4)
+    errs = [float(jnp.max(jnp.abs(last[:, 0] - full_logits[:, K - 1])))]
+    for i in range(K, S):
+        lg, cache = model.decode_step(params, cfg, cache, tokens[:, i:i + 1])
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full_logits[:, i]))))
+    worst = max(errs)
+    ok = worst < 2e-3
+    print(f"{'OK  ' if ok else 'FAIL'} {arch}: max |logit diff| = {worst:.2e}")
+    if not ok:
+        failures.append(arch)
+
+sys.exit(1 if failures else 0)

@@ -1,0 +1,38 @@
+"""Ad-hoc shakeout: every smoke arch through train fwd, prefill, decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, smoke_shape, concrete_inputs
+from repro.models import model
+
+failures = []
+for arch in ARCH_IDS:
+    cfg = get_config(arch, smoke=True)
+    try:
+        params = model.init(cfg, jax.random.key(0))
+        # --- train forward
+        batch = concrete_inputs(cfg, smoke_shape("train"))
+        h, aux = model.forward_train(params, cfg, batch)
+        logits = model.lm_logits(params, cfg, h)
+        assert not bool(jnp.isnan(logits).any()), "NaN logits (train)"
+        # --- prefill + decode
+        pbatch = concrete_inputs(cfg, smoke_shape("prefill"))
+        pbatch.pop("labels", None), pbatch.pop("loss_mask", None)
+        last, cache = model.prefill(params, cfg, pbatch, max_len=48)
+        assert not bool(jnp.isnan(last).any()), "NaN logits (prefill)"
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        lg, cache = model.decode_step(params, cfg, cache, tok)
+        lg2, cache = model.decode_step(
+            params, cfg, cache, jnp.argmax(lg, -1).astype(jnp.int32))
+        assert not bool(jnp.isnan(lg2).any()), "NaN logits (decode)"
+        print(f"OK   {arch}: train {h.shape}, prefill {last.shape}, "
+              f"decode {lg2.shape}, len={int(cache['len'])}")
+    except Exception as e:  # noqa: BLE001
+        import traceback
+        print(f"FAIL {arch}: {type(e).__name__}: {e}")
+        traceback.print_exc()
+        failures.append(arch)
+
+sys.exit(1 if failures else 0)

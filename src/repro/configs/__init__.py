@@ -1,0 +1,15 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS,
+    all_cells,
+    applicable_shapes,
+    concrete_inputs,
+    get_config,
+    input_specs,
+    smoke_shape,
+)

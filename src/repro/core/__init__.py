@@ -1,0 +1,26 @@
+"""The paper's contribution: mixture-of-experts memory modeling + memory-
+aware task co-location. See DESIGN.md for the TPU-fleet adaptation."""
+from repro.core import experts  # noqa: F401
+from repro.core.experts import MemoryFunction, calibrate_two_point  # noqa: F401
+from repro.core.predictor import (  # noqa: F401
+    ANNPredictor,
+    MoEPredictor,
+    OraclePredictor,
+    UnifiedFamilyPredictor,
+)
+from repro.core.simulator import (  # noqa: F401
+    OnlineSearchPolicy,
+    OraclePolicy,
+    OursPolicy,
+    PairwisePolicy,
+    QuasarPolicy,
+    SimConfig,
+    Simulator,
+    make_policies,
+)
+from repro.core.workloads import (  # noqa: F401
+    AppProfile,
+    spark_sim_suite,
+    tpu_jobs_suite,
+    training_apps,
+)

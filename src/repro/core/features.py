@@ -1,0 +1,139 @@
+"""Runtime feature extraction from COMPILED JAX artifacts.
+
+The paper extracts 22 perf-counter features (L1 miss rates, context
+switches, IPC, ...) from a ~100 MB profiling run. On a TPU fleet the
+equivalent observables come from the compiler: this module compiles a
+job's step at a small probe shape and derives 22 features from
+``cost_analysis`` / ``memory_analysis`` / the loop-aware HLO analysis —
+deterministic, allocation-free, and available before the job runs
+(DESIGN.md §2 maps each paper feature to its compiled analogue).
+
+``extract_features`` returns the same 22-dim vector format the
+spark-sim suite uses, so the MoE predictor pipeline (scaler -> PCA ->
+KNN) is shared verbatim between universes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+TPU_FEATURE_NAMES: List[str] = [
+    "log_flops", "log_hbm_bytes", "arithmetic_intensity",
+    "log_collective_bytes", "coll_allreduce_frac", "coll_allgather_frac",
+    "coll_alltoall_frac", "coll_permute_frac", "coll_op_count",
+    "log_param_bytes", "log_arg_bytes", "log_temp_bytes",
+    "temp_to_arg_ratio", "log_output_bytes", "dot_count", "fusion_count",
+    "while_count", "loop_trip_mean", "flops_per_token", "bytes_per_token",
+    "compute_term_share", "memory_term_share",
+]
+
+
+def _safe_log(x: float) -> float:
+    return float(np.log10(max(float(x), 1.0)))
+
+
+def features_from_record(rec: Dict) -> np.ndarray:
+    """22 features from a dry-run record (see launch/dryrun.lower_cell)."""
+    rl = rec["roofline"]
+    cost = rec["cost"]
+    mem = rec["memory"]
+    coll = rec["collectives"]
+    flops = cost["flops_per_device"]
+    hbm = cost.get("hbm_bytes_per_device", cost.get("bytes_per_device", 0))
+    cb = coll.get("total_bytes", 0.0)
+    by_kind = coll.get("bytes", {})
+    counts = coll.get("counts", {})
+    ops = rec.get("hlo_ops", {})
+    loops = rec.get("loops", [])
+    toks = max(rec.get("tokens", 1), 1)
+    tot = max(rl["compute_s"] + rl["memory_s"] + rl["collective_s"], 1e-12)
+
+    def frac(kind):
+        return float(by_kind.get(kind, 0.0)) / max(cb, 1.0)
+
+    vec = [
+        _safe_log(flops),
+        _safe_log(hbm),
+        float(flops / max(hbm, 1.0)),
+        _safe_log(cb),
+        frac("all-reduce"),
+        frac("all-gather"),
+        frac("all-to-all"),
+        frac("collective-permute"),
+        _safe_log(sum(counts.values()) if counts else 0),
+        _safe_log(rec.get("params_total", 0) * 2),
+        _safe_log(mem["argument_bytes"]),
+        _safe_log(mem["temp_bytes"]),
+        float(mem["temp_bytes"] / max(mem["argument_bytes"], 1.0)),
+        _safe_log(mem["output_bytes"]),
+        _safe_log(ops.get("dot", 0)),
+        _safe_log(ops.get("fusion", 0)),
+        float(ops.get("while", len(loops))),
+        float(np.mean([l["trip"] for l in loops]) if loops else 0.0),
+        _safe_log(flops / toks),
+        _safe_log(hbm / toks),
+        float(rl["compute_s"] / tot),
+        float(rl["memory_s"] / tot),
+    ]
+    assert len(vec) == len(TPU_FEATURE_NAMES)
+    return np.asarray(vec, float)
+
+
+def extract_features(cfg, shape_kind: str = "train", probe_seq: int = 64,
+                     probe_batch: int = 2) -> np.ndarray:
+    """Compile a small probe of the job's step on the current device and
+    extract the 22 features (the 100MB-profiling-run analogue).
+
+    Runs on whatever devices exist (1 on this container) — features are
+    shape/structure descriptors, not wall-clock measurements."""
+    import jax
+    from repro.configs import input_specs
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.models import model as model_lib
+    from repro.train import optim
+    from repro.train.step import build_serve_step, build_train_step
+    from repro.utils.hlo import count_ops
+    from repro.utils.hlo_analyzer import analyze
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+    shape = ShapeConfig("probe", shape_kind, probe_seq, probe_batch)
+    specs = input_specs(cfg, shape)
+    abstract_params = model_lib.abstract(cfg)
+    if shape_kind == "train":
+        tc = TrainConfig()
+        step = build_train_step(cfg, tc)
+        abstract_opt = optim.abstract_opt_state(abstract_params, tc)
+        lowered = jax.jit(step).lower(abstract_params, abstract_opt, specs)
+        tokens = probe_batch * probe_seq
+    else:
+        step = build_serve_step(cfg)
+        lowered = jax.jit(step).lower(abstract_params, specs["token"],
+                                      specs["cache"])
+        tokens = probe_batch
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    hc = analyze(hlo)
+    ma = compiled.memory_analysis()
+    from repro.utils.tree import tree_bytes
+    rec = {
+        "roofline": {
+            "compute_s": hc.flops / PEAK_FLOPS_BF16,
+            "memory_s": hc.hbm_bytes / HBM_BW,
+            "collective_s": hc.total_collective_bytes / ICI_BW,
+        },
+        "cost": {"flops_per_device": hc.flops,
+                 "hbm_bytes_per_device": hc.hbm_bytes},
+        "memory": {"argument_bytes": ma.argument_size_in_bytes,
+                   "temp_bytes": ma.temp_size_in_bytes,
+                   "output_bytes": ma.output_size_in_bytes},
+        "collectives": {"total_bytes": hc.total_collective_bytes,
+                        "bytes": hc.collective_bytes,
+                        "counts": hc.collective_counts},
+        "hlo_ops": count_ops(hlo, ("dot", "fusion", "while")),
+        "loops": hc.loops,
+        "params_total": sum(
+            int(np.prod(x.shape)) for x in jax.tree.leaves(abstract_params)),
+        "tokens": tokens,
+    }
+    return features_from_record(rec)

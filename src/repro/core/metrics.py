@@ -1,0 +1,87 @@
+"""Scenario runner + STP/ANTT aggregation (paper Section 5.2/5.3).
+
+Scenarios L1..L10 mix 2..30 randomly-selected applications; each scenario
+runs ``n_mixes`` different mixes; results are geometric-mean aggregated;
+min/max preserved for the error bars of Fig. 6.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.workloads import INPUT_SIZES_M_ITEMS, AppProfile
+
+SCENARIOS = {  # paper Table 3
+    "L1": 2, "L2": 6, "L3": 7, "L4": 9, "L5": 11,
+    "L6": 13, "L7": 19, "L8": 23, "L9": 26, "L10": 30,
+}
+
+
+def gmean(xs) -> float:
+    xs = np.asarray(xs, float)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))
+
+
+def make_mix(apps: List[AppProfile], n_jobs: int,
+             rng: np.random.Generator) -> List:
+    """Random app mix with random input sizes (small/medium/large)."""
+    chosen = rng.choice(len(apps), size=n_jobs,
+                        replace=n_jobs > len(apps))
+    sizes = list(INPUT_SIZES_M_ITEMS.values())
+    return [(apps[i], float(sizes[rng.integers(len(sizes))]))
+            for i in chosen]
+
+
+@dataclass
+class ScenarioResult:
+    stp_gmean: float
+    antt_gmean: float
+    antt_reduction_mean: float   # vs the serial one-by-one baseline
+    stp_min: float
+    stp_max: float
+    antt_min: float
+    antt_max: float
+    oom_total: int
+
+
+def run_scenario(apps: List[AppProfile], policy_factory, n_jobs: int,
+                 n_mixes: int = 20, cfg: Optional[SimConfig] = None,
+                 seed: int = 0) -> ScenarioResult:
+    """policy_factory: (mix_seed) -> Policy (fresh per mix so predictors
+    can be LOOCV-refit when needed)."""
+    cfg = cfg or SimConfig()
+    stps, antts, reds, ooms = [], [], [], 0
+    for mix in range(n_mixes):
+        rng = np.random.default_rng([seed, mix, n_jobs])
+        jobs = make_mix(apps, n_jobs, rng)
+        policy = policy_factory(mix)
+        sim = Simulator(jobs, policy, cfg, seed=seed * 1000 + mix)
+        out = sim.run()
+        stps.append(out["stp"])
+        antts.append(out["antt"])
+        reds.append(out["antt_reduction"])
+        ooms += out["oom_count"]
+    return ScenarioResult(
+        stp_gmean=gmean(stps), antt_gmean=gmean(antts),
+        antt_reduction_mean=float(np.mean(reds)),
+        stp_min=float(np.min(stps)), stp_max=float(np.max(stps)),
+        antt_min=float(np.min(antts)), antt_max=float(np.max(antts)),
+        oom_total=ooms)
+
+
+def run_all_scenarios(apps, policy_factories: Dict[str, object],
+                      scenarios: Optional[Sequence[str]] = None,
+                      n_mixes: int = 20, cfg: Optional[SimConfig] = None,
+                      seed: int = 0) -> Dict[str, Dict[str, ScenarioResult]]:
+    """-> {policy: {scenario: ScenarioResult}}."""
+    scenarios = list(scenarios or SCENARIOS)
+    out: Dict[str, Dict[str, ScenarioResult]] = {}
+    for pname, factory in policy_factories.items():
+        out[pname] = {}
+        for sc in scenarios:
+            out[pname][sc] = run_scenario(
+                apps, factory, SCENARIOS[sc], n_mixes, cfg, seed)
+    return out

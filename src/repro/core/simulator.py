@@ -1,0 +1,477 @@
+"""Event-driven cluster simulator for memory-aware task co-location.
+
+Reproduces the paper's evaluation mechanics: jobs arrive at t=0 (FCFS),
+profile while waiting (feature probe + 5%/10% calibration runs, whose
+processed items CREDIT the job — no wasted cycles), then a dispatcher
+spawns executors on hosts with spare memory and CPU headroom. Memory
+mis-prediction has real consequences: moderate over-subscription causes
+paging (host-wide slowdown), large overflow OOM-kills the executor and
+its items are re-queued (paper Section 2.3).
+
+Policies: OURS (mixture-of-experts), QUASAR-like (single ANN estimator),
+PAIRWISE (<=2 per host, claims all free memory), ONLINE-SEARCH (probing
+overhead), ORACLE (ground truth, no profiling).
+
+Fault tolerance (optional): Poisson host failures re-queue non-check-
+pointed work; straggler executors get speculative backups.
+
+Rates are piecewise-constant between events; every host-state change
+re-times that host's executors (lazy re-heap with version counters).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.experts import MemoryFunction
+from repro.core.workloads import AppProfile
+
+
+@dataclass
+class SimConfig:
+    n_hosts: int = 40
+    host_mem_gb: float = 64.0
+    paging_slowdown: float = 8.0
+    oom_overflow_frac: float = 0.25   # overflow beyond this -> OOM kill
+    oom_waste_frac: float = 0.10      # runtime wasted by a killed executor
+    profile_frac_lo: float = 0.08     # profiling time as a fraction of C_is
+    profile_frac_hi: float = 0.15
+    # items processed during profiling run at SINGLE-executor rate and
+    # credit the job (paper: "no computing cycle is wasted") — a small,
+    # honest credit, not a head start.
+    profile_single_host: bool = True
+    safety_margin: float = 0.0
+    min_alloc_gb: float = 2.0
+    tasks_per_slot: int = 4           # Spark task granularity per host slot
+    pairwise_default_heap: float = 0.5  # primary executor's default claim
+    cpu_slack: float = 1.15           # admit while sum(load) <= slack
+    #   (loads are AVERAGES; transient >100% just time-shares — the
+    #    proportional slowdown model charges for it)
+    online_search_eta: float = 0.30   # ONLINE-SEARCH probe overhead
+    online_alloc_lo: float = 0.65     # ONLINE-SEARCH allocation quality
+    # fault tolerance
+    failures: bool = False
+    host_mtbf_s: float = 0.0          # 0 -> no failures
+    repair_time_s: float = 300.0
+    checkpoint_interval_s: float = 60.0
+    straggler_prob: float = 0.0
+    straggler_factor: float = 0.35
+    speculative_backup: bool = True
+    max_sim_time: float = 1e9
+
+
+@dataclass
+class Job:
+    jid: int
+    app: AppProfile
+    items: float                      # total M-items
+    c_iso: float                      # isolated execution time (analytic)
+    fn_hat: Optional[MemoryFunction] = None
+    info: Dict = field(default_factory=dict)
+    unassigned: float = 0.0
+    done: float = 0.0
+    profiled_at: float = 0.0
+    finish: Optional[float] = None
+    conservative: bool = False
+    active: int = 0                   # running executors (O(1) finish check)
+    oom_count: int = 0
+
+
+@dataclass
+class Executor:
+    eid: int
+    job: Job
+    host: "Host"
+    items_left: float
+    mem_true: float
+    mem_claimed: float
+    rate_base: float
+    last_t: float
+    version: int = 0
+    delay_until: float = 0.0          # online-search probe delay
+    straggle: float = 1.0
+    done_since_ckpt: float = 0.0
+
+
+@dataclass
+class Host:
+    hid: int
+    mem_cap: float
+    execs: List[Executor] = field(default_factory=list)
+    up: bool = True
+
+    @property
+    def mem_true(self) -> float:
+        return sum(e.mem_true for e in self.execs)
+
+    @property
+    def mem_claimed(self) -> float:
+        return sum(e.mem_claimed for e in self.execs)
+
+    @property
+    def cpu_used(self) -> float:
+        return sum(e.job.app.cpu_load for e in self.execs)
+
+    def paging(self) -> bool:
+        return self.mem_true > self.mem_cap
+
+
+class Simulator:
+    def __init__(self, jobs_spec: List[Tuple[AppProfile, float]],
+                 policy: "Policy", cfg: SimConfig, seed: int = 0):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+        self.policy = policy
+        self.hosts = [Host(h, cfg.host_mem_gb) for h in range(cfg.n_hosts)]
+        self.jobs: List[Job] = []
+        for jid, (app, items) in enumerate(jobs_spec):
+            c_iso = items / (cfg.n_hosts * app.rate)
+            self.jobs.append(Job(jid, app, items, c_iso, unassigned=items))
+        self.events: list = []
+        self._seq = itertools.count()
+        self.t = 0.0
+        self.util_trace: List[Tuple[float, float]] = []
+        self._eid = itertools.count()
+        self.oom_count = 0
+        self.paging_time = 0.0
+
+    # --- event plumbing ---------------------------------------------------
+    def _push(self, t: float, kind: str, payload=None):
+        heapq.heappush(self.events, (t, next(self._seq), kind, payload))
+
+    def _rate(self, e: Executor) -> float:
+        if self.t < e.delay_until or not e.host.up:
+            return 0.0
+        r = e.rate_base * e.straggle
+        cpu = e.host.cpu_used
+        if cpu > 1.0:
+            r /= cpu
+        if e.host.paging():
+            r /= self.cfg.paging_slowdown
+        return max(r, 1e-12)
+
+    def _advance_host(self, host: Host):
+        """Credit progress to now and re-time finish events."""
+        for e in list(host.execs):
+            dt = self.t - e.last_t
+            if dt > 0:
+                done = min(e.items_left, self._rate(e) * dt)
+                e.items_left -= done
+                e.job.done += done
+                e.done_since_ckpt += done
+                e.last_t = self.t
+        for e in host.execs:
+            e.version += 1
+            rate = self._rate(e)
+            if e.items_left <= 1e-12:
+                self._push(self.t, "finish", (e, e.version))
+            elif rate > 0:
+                self._push(self.t + e.items_left / rate, "finish",
+                           (e, e.version))
+            elif e.delay_until > self.t:
+                self._push(e.delay_until, "wake", (e, e.version))
+
+    def _spawn(self, job: Job, host: Host, items: float, mem_true: float,
+               mem_claimed: float, delay: float = 0.0):
+        straggle = 1.0
+        if self.cfg.straggler_prob > 0 and \
+                self.rng.random() < self.cfg.straggler_prob:
+            straggle = self.cfg.straggler_factor
+        e = Executor(next(self._eid), job, host, items, mem_true,
+                     mem_claimed, job.app.rate, self.t,
+                     delay_until=self.t + delay, straggle=straggle)
+        job.unassigned -= items
+        job.active += 1
+        host.execs.append(e)
+        # OOM check: large overflow kills the executor after wasted time
+        over = host.mem_true - host.mem_cap
+        if over > self.cfg.oom_overflow_frac * host.mem_cap:
+            self.oom_count += 1
+            waste = (self.cfg.oom_waste_frac * items
+                     / max(job.app.rate, 1e-12))
+            self._push(self.t + waste, "oom", (e, e.version))
+        self._advance_host(host)
+        return e
+
+    def _remove_exec(self, e: Executor, requeue_items: float):
+        if e in e.host.execs:
+            e.host.execs.remove(e)
+            e.job.active -= 1
+        e.job.unassigned += requeue_items
+        self._advance_host(e.host)
+
+    def _maybe_finish(self, job: Job, t: float):
+        tol = max(1e-6, 1e-7 * job.items)
+        if job.finish is None and job.done >= job.items - tol \
+                and job.unassigned <= tol and job.active == 0:
+            job.finish = t
+
+    # --- main loop ----------------------------------------------------------
+    def run(self) -> Dict:
+        cfg = self.cfg
+        for job in self.jobs:
+            if self.policy.uses_profiling:
+                frac = self.rng.uniform(cfg.profile_frac_lo,
+                                        cfg.profile_frac_hi)
+                t_prof = frac * job.c_iso
+                if cfg.profile_single_host:
+                    credit = min(t_prof * job.app.rate, 0.15 * job.items)
+                else:
+                    credit = 0.15 * job.items
+                job.done += credit
+                job.unassigned -= credit
+                self._push(t_prof, "profiled", job)
+            else:
+                self._push(0.0, "profiled", job)
+        if cfg.failures and cfg.host_mtbf_s > 0:
+            for h in self.hosts:
+                self._push(self.rng.exponential(cfg.host_mtbf_s),
+                           "fail", h)
+
+        while self.events:
+            t, _, kind, payload = heapq.heappop(self.events)
+            if t > cfg.max_sim_time:
+                break
+            self.t = t
+            if kind == "profiled":
+                payload.profiled_at = t
+                payload.fn_hat, payload.info = self.policy.predict(
+                    payload, self.rng)
+                self.policy.dispatch(self)
+            elif kind in ("finish", "wake", "oom"):
+                e, version = payload
+                if e not in e.host.execs:
+                    continue  # executor already gone
+                if kind != "oom" and e.version != version:
+                    continue  # stale re-timed event
+                self._advance_host(e.host)
+                if kind == "oom" and e.items_left > 1e-9:
+                    self._remove_exec(e, e.items_left)
+                    # scheduler reaction (paper Section 2.3: re-run an
+                    # OOM-killed executor in isolation): escalate — halve
+                    # budgets, and after 2 OOMs only place this job on
+                    # empty hosts
+                    e.job.oom_count += 1
+                    self.policy.dispatch(self, [e.host])
+                elif e.items_left <= 1e-9:
+                    self._remove_exec(e, 0.0)
+                    self._maybe_finish(e.job, t)
+                    self.policy.dispatch(self, [e.host])
+            elif kind == "fail":
+                host = payload
+                if host.up:
+                    host.up = False
+                    # re-queue non-checkpointed work
+                    for e in list(host.execs):
+                        lost = min(e.done_since_ckpt, e.job.done)
+                        e.job.done -= lost
+                        self._remove_exec(e, e.items_left + lost)
+                    self._push(t + cfg.repair_time_s, "repair", host)
+                self._push(t + self.rng.exponential(cfg.host_mtbf_s),
+                           "fail", host)
+            elif kind == "repair":
+                payload.up = True
+                self.policy.dispatch(self, [payload])
+            self.util_trace.append(
+                (t, sum(h.cpu_used for h in self.hosts if h.up)
+                 / max(len(self.hosts), 1)))
+            if all(j.finish is not None for j in self.jobs):
+                break
+
+        # events drained: close out any numerically-finished jobs
+        for job in self.jobs:
+            self._maybe_finish(job, self.t)
+
+        c_cl = np.asarray([j.finish if j.finish is not None
+                           else cfg.max_sim_time for j in self.jobs])
+        c_is = np.asarray([j.c_iso for j in self.jobs])
+        stp = float(np.sum(c_is / c_cl))
+        antt = float(np.mean(c_cl / c_is))
+        # the paper's Fig.6b baseline runs jobs ONE BY ONE: its turnaround
+        # for job i includes waiting for jobs 1..i-1
+        serial_turnaround = np.cumsum(c_is)
+        antt_reduction = float(
+            1.0 - np.mean(c_cl) / max(np.mean(serial_turnaround), 1e-12))
+        return {"stp": stp, "antt": antt,
+                "antt_reduction": antt_reduction,
+                "makespan": float(np.max(c_cl)),
+                "c_cl": c_cl.tolist(), "c_is": c_is.tolist(),
+                "oom_count": self.oom_count,
+                "util_trace": self.util_trace}
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+class Policy:
+    """Base: predictor-driven best-fit co-location (the paper's runtime)."""
+    name = "base"
+    uses_profiling = True
+
+    def __init__(self, predictor):
+        self.predictor = predictor
+
+    def predict(self, job: Job, rng) -> Tuple[MemoryFunction, Dict]:
+        return self.predictor.predict_function(job.app, job.items, rng)
+
+    def spawn_params(self, sim, job, host, budget) -> Optional[Tuple]:
+        """-> (items, mem_true, mem_claimed, delay) or None.
+
+        Items per executor = min(memory budget via the predicted function's
+        inverse, the Spark partition chunk D/H). The chunk cap preserves
+        job-level parallelism (an executor that cached the whole input
+        would serialize the job); the memory cap is the paper's mechanism.
+        On an EMPTY host at least a chunk is taken even if it won't fully
+        fit in cache (spill == paging penalty)."""
+        chunk = job.items / (sim.cfg.n_hosts * sim.cfg.tasks_per_slot)
+        n = min(job.unassigned, job.fn_hat.inverse(budget), chunk)
+        if not host.execs:
+            n = min(job.unassigned, max(n, chunk))
+        # an executor below a quarter chunk isn't worth co-locating (and
+        # unbounded micro-executors would storm the event loop); the tail
+        # of a nearly-done job is always placeable
+        if n < min(chunk * 0.25, job.unassigned) - 1e-12 or n <= 1e-9:
+            return None
+        mem_true = job.app.measure(n)
+        mem_claimed = min(float(job.fn_hat(n)), budget)
+        return n, mem_true, mem_claimed, 0.0
+
+    def dispatch(self, sim: Simulator, hosts=None):
+        """Offer capacity to jobs FCFS. ``hosts`` narrows the scan to the
+        hosts whose state changed (executor finish/OOM/repair) — a full
+        cluster scan happens only when a new job becomes schedulable."""
+        cfg = sim.cfg
+        hosts = hosts if hosts is not None else sim.hosts
+        for job in sim.jobs:
+            if job.fn_hat is None or job.unassigned <= 1e-9:
+                continue
+            for host in hosts:
+                if not host.up or job.unassigned <= 1e-9:
+                    continue
+                if any(e.job is job for e in host.execs):
+                    continue  # one executor per (job, host)
+                if job.oom_count >= 2 and host.execs:
+                    continue  # isolation re-run after repeated OOM
+                free = host.mem_cap - host.mem_claimed
+                cpu_free = cfg.cpu_slack - host.cpu_used
+                if free < cfg.min_alloc_gb or \
+                        cpu_free < job.app.cpu_load:
+                    continue
+                budget = free * (1.0 - cfg.safety_margin)
+                if getattr(job, "conservative", False):
+                    budget *= 0.5
+                budget *= 0.5 ** min(job.oom_count, 3)
+                params = self.spawn_params(sim, job, host, budget)
+                if params is None:
+                    continue
+                n, mt, mc, delay = params
+                sim._spawn(job, host, n, mt, mc, delay)
+
+
+class OursPolicy(Policy):
+    name = "ours"
+
+    def predict(self, job, rng):
+        fn, info = self.predictor.predict_function(job.app, job.items, rng)
+        if not info.get("confident", True):
+            job.conservative = True
+        return fn, info
+
+
+class QuasarPolicy(Policy):
+    name = "quasar"
+
+
+class OraclePolicy(Policy):
+    """Prophetic memory prediction. Jobs flow through the same pipeline
+    (same arrival staggering) — only the prediction is perfect, so Oracle
+    is the schedule-dynamics-matched upper bound for OURS (the paper
+    reports "% of Oracle performance" in exactly this sense)."""
+    name = "oracle"
+    uses_profiling = True
+
+
+class OnlineSearchPolicy(Policy):
+    """Descent-search for the right input size: probing overhead per
+    executor launch + suboptimal final allocation (paper Section 6.5)."""
+    name = "online"
+    uses_profiling = False
+
+    def __init__(self):
+        super().__init__(None)
+
+    def predict(self, job, rng):
+        return job.app.true_fn, {"family": job.app.family}
+
+    def spawn_params(self, sim, job, host, budget):
+        chunk = job.items / (sim.cfg.n_hosts * sim.cfg.tasks_per_slot)
+        n_opt = min(job.unassigned, job.fn_hat.inverse(budget), chunk)
+        if not host.execs:
+            n_opt = min(job.unassigned, max(n_opt, chunk))
+        if n_opt < min(chunk * 0.25, job.unassigned) - 1e-12 \
+                or n_opt <= 1e-9:
+            return None
+        qual = sim.rng.uniform(sim.cfg.online_alloc_lo, 1.0)
+        n = n_opt * qual
+        mem_true = job.app.measure(n)
+        delay = sim.cfg.online_search_eta * n / max(job.app.rate, 1e-12)
+        return n, mem_true, min(float(job.fn_hat(n)), budget), delay
+
+
+class PairwisePolicy(Policy):
+    """<=2 executors per host; the co-located one claims ALL free memory
+    and takes a Spark-default item chunk (no memory model)."""
+    name = "pairwise"
+    uses_profiling = False
+
+    def __init__(self):
+        super().__init__(None)
+
+    def predict(self, job, rng):
+        return job.app.true_fn, {}  # never used for sizing
+
+    def dispatch(self, sim: Simulator, hosts=None):
+        cfg = sim.cfg
+        hosts = hosts if hosts is not None else sim.hosts
+        for job in sim.jobs:
+            if job.fn_hat is None or job.unassigned <= 1e-9:
+                continue
+            for host in hosts:
+                if not host.up or job.unassigned <= 1e-9:
+                    continue
+                if len(host.execs) >= 2:
+                    continue
+                if any(e.job is job for e in host.execs):
+                    continue
+                if job.oom_count >= 2 and host.execs:
+                    continue  # isolation re-run after repeated OOM
+                free = host.mem_cap - host.mem_claimed
+                if free < cfg.min_alloc_gb:
+                    continue
+                # primary executor claims the Spark default heap; the
+                # co-located one claims ALL remaining free memory (paper:
+                # "sets the maximum heap size of the co-locating task to
+                # the size of free memory") -> nothing beyond pairwise.
+                claim = (cfg.pairwise_default_heap * host.mem_cap
+                         if not host.execs else free)
+                claim = min(claim, free)
+                chunk = min(job.unassigned,
+                            job.items / (cfg.n_hosts * cfg.tasks_per_slot))
+                mem_true = job.app.measure(chunk)
+                sim._spawn(job, host, chunk, mem_true, claim)
+
+
+def make_policies(moe_predictor, ann_predictor) -> Dict[str, Policy]:
+    from repro.core.predictor import OraclePredictor
+    return {
+        "ours": OursPolicy(moe_predictor),
+        "quasar": QuasarPolicy(ann_predictor),
+        "pairwise": PairwisePolicy(),
+        "online": OnlineSearchPolicy(),
+        "oracle": OraclePolicy(OraclePredictor()),
+    }

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+Each kernel ships three modules:
+  kernel.py — pl.pallas_call + BlockSpec VMEM tiling
+  ops.py    — jit'd wrapper (layout, padding, backend dispatch)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+"""

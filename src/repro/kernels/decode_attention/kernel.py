@@ -1,0 +1,117 @@
+"""Pallas TPU flash-decode: one query token vs a chunked KV cache.
+
+Grid: (batch, q_heads, kv_chunks) — chunks sequential, (acc, m, l) in VMEM
+scratch. The same (max, sum)-LSE combination is what the sequence-parallel
+decode path psums across shards, so this kernel is the single-shard body
+of distributed decode.
+
+Cache layout: [B, S, Hkv, D] (model layout, no transpose needed for
+decode: S is the second axis and blocks tile it directly). Valid-length
+masking comes from a per-batch ``lens`` s32 array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, window: int, softcap: float, blk_k: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cache_len = len_ref[0]             # valid entries incl. current token
+    k_start = ik * blk_k
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)           # [1, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)        # [blk_k, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [1, blk_k]
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, blk_k), 1)
+        mask = k_pos < cache_len
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > cache_len - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # skip chunks entirely past the valid length (or below the window)
+    needed = k_start < cache_len
+    if window > 0:
+        needed = jnp.logical_and(
+            needed, k_start + blk_k - 1 > cache_len - 1 - window)
+    pl.when(needed)(_body)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(
+    q: jnp.ndarray,        # [B, Hq, 1, D]
+    k_cache: jnp.ndarray,  # [B, S, Hkv, D]
+    v_cache: jnp.ndarray,
+    lens: jnp.ndarray,     # [B] int32: valid entries (incl. current token)
+    *,
+    scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+    blk_k: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, Hq, _, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    assert S % blk_k == 0, (S, blk_k)
+    group = Hq // Hkv
+    grid = (B, Hq, S // blk_k)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, softcap=softcap,
+        blk_k=blk_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, blk_k, 1, D),
+                         lambda b, h, ik, g=group: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, blk_k, 1, D),
+                         lambda b, h, ik, g=group: (b, ik, h // g, 0)),
+            pl.BlockSpec((1,), lambda b, h, ik: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, lens)

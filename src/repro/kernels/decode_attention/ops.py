@@ -1,0 +1,48 @@
+"""Jitted wrapper for flash-decode, model layout in/out."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "attn_softcap", "scale", "blk_k",
+                     "interpret"))
+def decode_attention(
+    q: jnp.ndarray,        # [B, 1, Hq, D] (model layout)
+    k_cache: jnp.ndarray,  # [B, S, Hkv, D]
+    v_cache: jnp.ndarray,
+    cache_len,             # scalar or [B]: index of current token
+    *,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    scale: Optional[float] = None,
+    blk_k: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    B, _, Hq, D = q.shape
+    S = k_cache.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+    interpret = _interpret_default() if interpret is None else interpret
+    blk_k = min(blk_k, S)
+    pad = (-S) % blk_k
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32) + 1, (B,))
+    out = decode_attention_fwd(
+        jnp.moveaxis(q, 2, 1), k_cache, v_cache, lens, scale=scale,
+        window=window, softcap=attn_softcap, blk_k=blk_k,
+        interpret=interpret)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash-decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lens, *, scale, window=0,
+                         softcap=0.0):
+    """q: [B, Hq, 1, D]; caches [B, S, Hkv, D]; lens [B]. -> [B, Hq, 1, D]."""
+    B, Hq, _, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    kf = jnp.moveaxis(k_cache, 2, 1).astype(jnp.float32)  # [B,Hkv,S,D]
+    vf = jnp.moveaxis(v_cache, 2, 1).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, kf) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(S)[None, :]
+    mask = k_pos < lens[:, None]
+    if window > 0:
+        mask = mask & (k_pos > (lens[:, None] - 1 - window))
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, vf)
+    return o.reshape(B, Hq, 1, D).astype(q.dtype)

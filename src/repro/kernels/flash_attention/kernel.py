@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (prefill): blockwise online softmax.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — kv innermost/sequential, so
+the fp32 (acc, m, l) state lives in VMEM scratch across kv iterations.
+BlockSpec tiles: q/o (1,1,blk_q,D), k/v (1,1,blk_k,D) — MXU-aligned when
+blk_* are multiples of 128 and D is 64/128.
+
+Supports: causal masking, GQA (kv-head index_map = h * Hkv // Hq), logit
+softcap (gemma2), sliding window (gemma2 local layers), padded seq tails.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  blk_q: int, blk_k: int, seq_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * blk_q
+    k_start = ik * blk_k
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # [blk_q, D]
+        k = k_ref[0, 0].astype(jnp.float32)            # [blk_k, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [blk_q, blk_k]
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_k), 1)
+        mask = k_pos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # [blk_q, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # [blk_q, blk_k]
+        alpha = jnp.exp(m_prev - m_new)                # [blk_q, 1]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # block-level skip: fully-masked kv blocks do no work
+    conds = []
+    if causal:
+        conds.append(k_start <= q_start + blk_q - 1)
+    if window > 0:  # kv block entirely left of every query's window
+        conds.append(k_start + blk_k - 1 > q_start - window)
+    if conds:
+        needed = conds[0]
+        for c in conds[1:]:
+            needed = jnp.logical_and(needed, c)
+        pl.when(needed)(_body)
+    else:
+        _body()
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,  # [B, Hq, S, D]
+    k: jnp.ndarray,  # [B, Hkv, S, D]
+    v: jnp.ndarray,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    seq_len: int = 0,   # true (unpadded) length; 0 -> padded length
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    assert S % blk_q == 0 and S % blk_k == 0, (S, blk_q, blk_k)
+    true_len = seq_len or S
+    grid = (B, Hq, S // blk_q, S // blk_k)
+    group = Hq // Hkv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, blk_q=blk_q, blk_k=blk_k, seq_len=true_len)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, D),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, blk_k, D),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, blk_k, D),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, D), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

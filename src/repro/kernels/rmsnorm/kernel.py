@@ -1,0 +1,38 @@
+"""Pallas TPU fused RMSNorm: one pass over rows, fp32 accumulation.
+
+Grid: (row_blocks,). Block (blk, d) in VMEM; weight broadcast block (d,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = (x * inv * w_ref[...].astype(jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+def rmsnorm_fwd(x2d: jnp.ndarray, w: jnp.ndarray, *, eps: float,
+                blk: int = 256, interpret: bool = True) -> jnp.ndarray:
+    N, d = x2d.shape
+    blk = min(blk, N)
+    assert N % blk == 0, (N, blk)
+    kernel = functools.partial(_rms_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, d), x2d.dtype),
+        interpret=interpret,
+    )(x2d, w)

@@ -1,0 +1,32 @@
+"""Jitted wrapper: arbitrary leading dims, padding, dispatch."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "blk", "interpret"))
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, *, eps: float = 1e-6,
+            blk: int = 256, interpret: Optional[bool] = None) -> jnp.ndarray:
+    interpret = _interpret_default() if interpret is None else interpret
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    N = x2.shape[0]
+    blk = min(blk, N)
+    pad = (-N) % blk
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = rmsnorm_fwd(x2, w, eps=eps, blk=blk, interpret=interpret)
+    if pad:
+        out = out[:N]
+    return out.reshape(shape)

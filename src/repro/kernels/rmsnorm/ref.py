@@ -1,0 +1,6 @@
+"""Oracle: the model's rms_norm (pure jnp)."""
+from repro.models.layers import rms_norm
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    return rms_norm(x, w, eps=eps, use_pallas=False)

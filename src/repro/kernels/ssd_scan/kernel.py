@@ -1,0 +1,103 @@
+"""Pallas TPU Mamba2 SSD chunked scan.
+
+Grid: (batch, heads, chunks) — chunks sequential; the inter-chunk SSM
+state [P, N] lives in VMEM scratch across chunk iterations (reset at
+chunk 0). Each iteration does the intra-chunk quadratic term (two MXU
+matmuls over [Q, Q]) plus the state update — the same math as
+``repro.models.ssm.ssd_chunked`` (the oracle), chunk-at-a-time.
+
+Inputs are pre-arranged per head: xb (dt-weighted x), a (log-decay),
+B/C expanded to per-head [B, S, H, N] (group broadcast happens in ops.py
+— a gather-free repeat).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xb_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref, *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xb = xb_ref[0, :, 0].astype(jnp.float32)     # [Q, P]
+    a = a_ref[0, :, 0].astype(jnp.float32)       # [Q]
+    Bm = b_ref[0, :, 0].astype(jnp.float32)      # [Q, N]
+    Cm = c_ref[0, :, 0].astype(jnp.float32)      # [Q, N]
+
+    cum = jnp.cumsum(a)                          # [Q]
+    # intra-chunk: M[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * (i >= j)
+    seg = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q,Q]
+    y_intra = jax.lax.dot_general(cb * L, xb, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_i += exp(cum_i) * C_i . state^T   (state: [P, N])
+    prev = state_ref[...]                        # [P, N]
+    y_inter = jax.lax.dot_general(Cm, prev, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y = y_intra + y_inter * jnp.exp(cum)[:, None]
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    # state update: S' = S * exp(cum_last) + sum_j exp(cum_last - cum_j)
+    #                                             * xb_j (x) B_j
+    a_last = cum[chunk - 1]
+    decay = jnp.exp(a_last - cum)                # [Q]
+    contrib = jax.lax.dot_general(
+        xb * decay[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # [P, N]
+    state_ref[...] = prev * jnp.exp(a_last) + contrib
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        state_out_ref[0, 0] = state_ref[...].astype(state_out_ref.dtype)
+
+
+def ssd_scan_fwd(
+    xb: jnp.ndarray,   # [B, S, H, P] dt-weighted inputs
+    a: jnp.ndarray,    # [B, S, H] log decay
+    Bh: jnp.ndarray,   # [B, S, H, N] (already head-expanded)
+    Ch: jnp.ndarray,   # [B, S, H, N]
+    *,
+    chunk: int,
+    interpret: bool = True,
+):
+    B, S, H, P = xb.shape
+    N = Bh.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    grid = (B, H, S // chunk)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), xb.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xb, a, Bh, Ch)
+    return y, state

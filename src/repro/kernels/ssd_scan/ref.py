@@ -1,0 +1,10 @@
+"""Oracle: the chunked SSD in repro.models.ssm (pure jnp)."""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(xb, a, B_mat, C_mat, *, chunk, initial_state=None):
+    """xb: [B,S,H,P]; a: [B,S,H]; B/C: [B,S,G,N] (grouped, like the model)."""
+    return ssd_chunked(xb, a, B_mat, C_mat, chunk=chunk,
+                       initial_state=initial_state, use_pallas=False)

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax-touching import)
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we ``jit(step).lower(...).compile()`` against the production
+mesh with ShapeDtypeStruct inputs (no allocation), then record:
+  * memory_analysis()  — per-device argument/temp/output/peak bytes
+  * cost_analysis()    — per-device HLO FLOPs and bytes accessed
+  * collective stats   — parsed from the post-SPMD HLO (operand bytes per
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-
+    permute)
+  * roofline terms     — compute / memory / collective seconds (v5e consts)
+
+Results append incrementally to a JSON file consumed by
+``benchmarks/roofline.py`` and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, TrainConfig, get_config, input_specs
+from repro.configs.registry import all_cells
+from repro.launch import sharding as shd
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh, num_chips)
+from repro.models import model as model_lib
+from repro.train import optim
+from repro.train.step import build_serve_step, build_train_step
+from repro.utils.hlo import count_ops
+from repro.utils.hlo_analyzer import analyze
+from repro.utils.tree import flatten_with_paths
+
+
+def arch_train_config(arch: str) -> TrainConfig:
+    """Per-arch training knobs: the 1T-class arch uses bf16 Adam moments."""
+    if arch.startswith("kimi"):
+        return TrainConfig(adam_dtype="bfloat16")
+    return TrainConfig()
+
+
+def count_params(cfg, abstract_params) -> Dict[str, float]:
+    total = 0
+    expert = 0
+    for path, leaf in flatten_with_paths(abstract_params):
+        n = int(np.prod(leaf.shape))
+        total += n
+        if any(k in path for k in ("w_gate", "w_up", "w_down")):
+            expert += n
+    active = total - expert
+    if cfg.num_experts:
+        active += expert * cfg.experts_per_token / cfg.num_experts
+    return {"params_total": float(total), "params_active": float(active)}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: Optional[Dict[str, Any]] = None,
+               opts: Optional[set] = None):
+    """Build + lower + compile one cell. Returns (record, compiled).
+
+    ``opts``: named optimizations measured in EXPERIMENTS.md §Perf —
+      ep_moe     shard_map expert-parallel MoE dispatch
+      (config-level levers go through ``overrides``.)
+    """
+    import contextlib
+    opts = opts or set()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**{k: v for k, v in overrides.items()
+                             if hasattr(cfg, k)})
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    abstract_params = model_lib.abstract(cfg)
+    pcounts = count_params(cfg, abstract_params)
+
+    ctx = contextlib.nullcontext()
+    if ("ep_moe" in opts or "ep_moe_tp" in opts) and cfg.family == "moe":
+        from repro.models.moe_ep import ep_mesh_context
+        ctx = ep_mesh_context(
+            mesh, extra_batch_axes=("pod",) if multi_pod else (),
+            tp_dispatch="ep_moe_tp" in opts)
+
+    t0 = time.time()
+    with mesh, ctx:
+        if shape.kind == "train":
+            tc = arch_train_config(arch)
+            step = build_train_step(cfg, tc)
+            abstract_opt = optim.abstract_opt_state(abstract_params, tc)
+            sh = shd.train_shardings(cfg, mesh, abstract_params,
+                                     abstract_opt, specs, tc)
+            fn = jax.jit(
+                step,
+                in_shardings=(sh["params"], sh["opt"], sh["batch"]),
+                out_shardings=(sh["params"], sh["opt"], None),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(abstract_params, abstract_opt, specs)
+        elif shape.kind == "prefill":
+            from repro.train.step import build_prefill_step
+            pstep = build_prefill_step(cfg, max_len=shape.seq_len)
+            sh_p = shd.param_specs(cfg, abstract_params, mesh, kind="serve")
+            abstract_cache = model_lib.init_cache(
+                cfg, shape.global_batch, shape.seq_len, abstract_only=True)
+            cache_sp = shd.cache_specs(cfg, abstract_cache, mesh)
+            bs = shd.batch_specs(specs, mesh)
+            fn = jax.jit(
+                pstep,
+                in_shardings=(shd.to_named(sh_p, mesh),
+                              shd.to_named(bs, mesh)),
+                out_shardings=(None, shd.to_named(cache_sp, mesh)),
+            )
+            lowered = fn.lower(abstract_params, specs)
+        else:  # decode
+            sstep = build_serve_step(cfg)
+            sh = shd.serve_shardings(cfg, mesh, abstract_params,
+                                     specs["cache"], shape.global_batch)
+            fn = jax.jit(
+                sstep,
+                in_shardings=(sh["params"], sh["token"], sh["cache"]),
+                out_shardings=(sh["token"], sh["cache"]),
+                donate_argnums=(2,),
+            )
+            lowered = fn.lower(abstract_params, specs["token"],
+                               specs["cache"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # loop-aware static analysis (XLA's cost_analysis counts while bodies
+    # once — useless for scan-over-layers models; see utils/hlo_analyzer)
+    hc = analyze(hlo)
+    ops = count_ops(hlo)
+
+    chips = num_chips(mesh)
+    flops = hc.flops
+    hbm_bytes = hc.hbm_bytes
+    coll_bytes = hc.total_collective_bytes
+    # all analyses are per-device (the HLO is the SPMD per-partition module)
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "opts": sorted(opts),
+        "overrides": dict(overrides or {}),
+        "ok": True,
+        **pcounts,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", 0),
+        },
+        "cost": {
+            "flops_per_device": flops,
+            "hbm_bytes_per_device": hbm_bytes,
+            "xla_flops_raw": float(ca.get("flops", 0.0)),
+            "xla_bytes_raw": float(ca.get("bytes accessed", 0.0)),
+        },
+        "collectives": {
+            "bytes": hc.collective_bytes,
+            "counts": hc.collective_counts,
+            "total_bytes": coll_bytes,
+        },
+        "bytes_by_op": {k: v for k, v in sorted(
+            hc.bytes_by_op.items(), key=lambda kv: -kv[1])[:10]},
+        "loops": hc.loops,
+        "hlo_ops": ops,
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS_BF16,
+            "memory_s": hbm_bytes / HBM_BW,
+            "collective_s": coll_bytes / ICI_BW,
+        },
+        "timing": {"lower_s": round(t_lower, 2),
+                   "compile_s": round(t_compile, 2)},
+        "tokens": SHAPES[shape_name].global_batch * (
+            SHAPES[shape_name].seq_len if shape.kind == "train" else 1),
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: record["roofline"][k])
+    record["roofline"]["dominant"] = dom
+    return record, compiled
+
+
+def run_cell_safe(arch, shape_name, multi_pod, overrides=None, opts=None):
+    try:
+        rec, _ = lower_cell(arch, shape_name, multi_pod, overrides, opts)
+        return rec
+    except Exception as e:  # noqa: BLE001
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "ok": False, "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+
+
+def load_results(path: str) -> Dict[str, Any]:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(path: str, results: Dict[str, Any]):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1)
+    os.replace(tmp, path)
+
+
+def cell_key(arch, shape, multi_pod):
+    return f"{arch}|{shape}|{'multi' if multi_pod else 'single'}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells already in --out")
+    ap.add_argument("--only-missing", action="store_true")
+    ap.add_argument("--opts", default="",
+                    help="comma-separated optimizations (e.g. ep_moe)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (repeatable)")
+    args = ap.parse_args()
+
+    opts = set(o for o in args.opts.split(",") if o)
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = load_results(args.out)
+    for arch, shape in cells:
+        for mp in meshes:
+            key = cell_key(arch, shape, mp)
+            if key in results and results[key].get("ok") and not args.force:
+                print(f"skip {key} (cached)")
+                continue
+            print(f"=== {key} ===", flush=True)
+            rec = run_cell_safe(arch, shape, mp, overrides or None,
+                                opts or None)
+            results[key] = rec
+            save_results(args.out, results)
+            if rec["ok"]:
+                r = rec["roofline"]
+                print(f"  ok: compute={r['compute_s']:.4f}s "
+                      f"memory={r['memory_s']:.4f}s "
+                      f"collective={r['collective_s']:.4f}s "
+                      f"dominant={r['dominant']} "
+                      f"(compile {rec['timing']['compile_s']}s)", flush=True)
+            else:
+                print(f"  FAIL: {rec['error']}", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

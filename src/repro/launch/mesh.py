@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before its first
+jax import, and nothing else should.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e-class hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for subprocess multi-device tests (8 fake devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The axes a global batch shards over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def num_chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

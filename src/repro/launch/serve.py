@@ -1,0 +1,87 @@
+"""Production serving driver: prefill + decode loop with the paper's
+memory-budgeted admission (the serving-side co-location hook).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --requests 8 --decode-steps 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import experts
+from repro.models import model as model_lib
+from repro.train.step import build_decode_step, build_prefill_step
+from repro.utils.tree import tree_bytes
+
+
+def admission_batch(cfg, max_len: int, budget_gb: float) -> int:
+    """Paper-style: calibrate footprint(batch) at two small batches, admit
+    via the inverse under the HBM budget."""
+    def fp(b):
+        w = tree_bytes(model_lib.abstract(cfg))
+        c = model_lib.init_cache(cfg, b, max_len, abstract_only=True)
+        return (w + tree_bytes(c)) / 2 ** 30
+    fn = experts.calibrate_two_point("affine", 2, fp(2), 4, fp(4))
+    return max(int(fn.inverse(budget_gb)), 1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=16)
+    ap.add_argument("--budget-gb", type=float, default=1.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    max_len = args.prompt_len + args.decode_steps + 1
+    admit = min(admission_batch(cfg, max_len, args.budget_gb),
+                args.requests)
+    print(f"admitting {admit} concurrent requests under "
+          f"{args.budget_gb} GB")
+
+    params = model_lib.init(cfg, jax.random.key(0))
+    prefill = jax.jit(build_prefill_step(cfg, max_len))
+    decode = jax.jit(build_decode_step(cfg), donate_argnums=(1,))
+
+    rng = np.random.default_rng(0)
+    served, t0 = 0, time.time()
+    pending = args.requests
+    while pending > 0:
+        B = min(admit, pending)
+        toks = jnp.asarray(rng.integers(
+            3, cfg.vocab_size, (B, args.prompt_len)), jnp.int32)
+        batch = {"tokens": toks}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jnp.asarray(
+                rng.normal(0, 0.02, (B, 8, cfg.d_model)), jnp.float32)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.asarray(
+                rng.normal(0, 0.02, (B, 4, cfg.d_model)), jnp.float32)
+        logits, cache = prefill(params, batch)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs = [tok]
+        for _ in range(args.decode_steps - 1):
+            lg, cache = decode(params, cache, outs[-1])
+            outs.append(jnp.argmax(lg, -1).astype(jnp.int32))
+        gen = jnp.concatenate(outs, axis=1)
+        served += B
+        pending -= B
+        print(f"wave: {B} requests, {gen.shape[1]} tokens each "
+              f"(sample: {np.asarray(gen[0])[:8].tolist()})", flush=True)
+    dt = time.time() - t0
+    tot = served * args.decode_steps
+    print(f"served {served} requests / {tot} tokens in {dt:.1f}s "
+          f"({tot/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

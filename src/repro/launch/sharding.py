@@ -1,0 +1,294 @@
+"""Rule-based PartitionSpec assignment: DP / TP / EP / SP / FSDP.
+
+One rule table covers every architecture because param-leaf *names* encode
+their role (wq/wk/wv/wo, wi_*/w_gate/w_up/w_down, in_proj/out_proj, embed,
+lm_head, ...). Stacked (scan-over-layers) leaves get their leading layer
+dim padded with None automatically.
+
+Adaptive choices:
+  * KV caches: head-sharded over 'model' when Hkv divides the model axis,
+    otherwise sequence-sharded (SP) — small-GQA archs (kv=4/8) would waste
+    up to 4x KV HBM on padding otherwise.
+  * FSDP: when (param+optimizer) bytes per chip exceed the HBM budget with
+    TP alone, large leaves additionally shard over the data axes
+    (ZeRO-3-style; the scan body all-gathers one layer at a time).
+  * Batch: sharded over ('pod','data') when divisible, 'data' when only
+    that divides, replicated otherwise (long_500k has B=1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.launch.mesh import data_axes, model_axis_size
+from repro.utils.tree import flatten_with_paths
+
+HBM_BYTES = 16 * 2 ** 30          # v5e chip
+FSDP_MIN_LEAF_BYTES = 16 * 2 ** 20
+
+
+# --- per-leaf base rules: map last path component -> spec (trailing dims) --
+
+_PARAM_RULES = {
+    "embed": P("model", None),          # [V, d] vocab-sharded
+    "lm_head": P(None, "model"),        # [d, V]
+    "wq": P(None, "model"),
+    "wk": P(None, "model"),
+    "wv": P(None, "model"),
+    "wo": P("model", None),             # attn out AND mlp down: [big, d]
+    "wi_gate": P(None, "model"),
+    "wi_up": P(None, "model"),
+    "w_router": P(None, None),
+    "w_gate": P("model", None, None),   # [E, d, f] expert-parallel
+    "w_up": P("model", None, None),
+    "w_down": P("model", None, None),
+    "in_proj": P(None, "model"),
+    "out_proj": P("model", None),
+    "conv_w": P(None, "model"),
+    "conv_b": P("model"),
+    "dt_bias": P("model"),
+    "A_log": P("model"),
+    "D": P("model"),
+    "norm_w": P("model"),
+}
+_REPLICATED_SUFFIXES = ("ln_w", "q_norm", "k_norm")
+
+# Expert weights: EP over 'data' (E), Megatron-style TP over 'model' (f).
+# Never FSDP-gathered (the scan-stacked all-gather-inside-loop pathology);
+# DP gradient reduction becomes a reduce-scatter over experts for free.
+_EXPERT_RULES = {
+    "w_gate": P("data", None, "model"),   # [E, d, f]
+    "w_up": P("data", None, "model"),
+    "w_down": P("data", "model", None),   # [E, f, d]
+}
+
+
+def _leaf_spec(path: str, ndim: int) -> P:
+    name = path.rsplit("/", 1)[-1]
+    if any(name.endswith(s) for s in _REPLICATED_SUFFIXES):
+        return P()
+    rule = _EXPERT_RULES.get(name) or _PARAM_RULES.get(name)
+    if rule is None:
+        return P()
+    pad = ndim - len(rule)
+    assert pad >= 0, (path, ndim, rule)
+    return P(*([None] * pad + list(rule)))
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def fix_spec(spec: P, shape, mesh) -> P:
+    """pjit *input* shardings must divide exactly — drop axes that don't.
+    (GSPMD pads intermediates, but argument shardings are strict.)"""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, parts):
+        out.append(axis if axis is not None
+                   and dim % _axis_size(mesh, axis) == 0 else None)
+    return P(*out)
+
+
+def _spec_axes(spec: P) -> set:
+    used = set()
+    for part in spec:
+        if part is None:
+            continue
+        if isinstance(part, (tuple, list)):
+            used.update(part)
+        else:
+            used.add(part)
+    return used
+
+
+def _add_fsdp(spec: P, shape, fsdp_axes, model_shards: int,
+              itemsize: int) -> P:
+    """Add the (not-yet-used) data axes to the largest unsharded dim of a
+    big leaf. Leaves already sharded over an fsdp axis (EP expert weights)
+    only receive the remaining axes."""
+    used = _spec_axes(spec)
+    free = tuple(a for a in fsdp_axes if a not in used)
+    if not free:
+        return spec
+    local_bytes = int(np.prod(shape)) * itemsize
+    for a in used:
+        local_bytes //= max(model_shards if a == "model" else 1, 1)
+    if local_bytes < FSDP_MIN_LEAF_BYTES:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    cand = [(shape[i], i) for i in range(len(shape)) if parts[i] is None]
+    if not cand:
+        return spec
+    _, axis = max(cand)
+    parts[axis] = free if len(free) > 1 else free[0]
+    return P(*parts)
+
+
+def param_bytes_estimate(abstract_params) -> int:
+    from repro.utils.tree import tree_bytes
+    return tree_bytes(abstract_params)
+
+
+def decide_fsdp(cfg: ModelConfig, abstract_params, mesh, kind: str,
+                tc: Optional[TrainConfig] = None) -> bool:
+    """FSDP when TP-only param (+opt) state would blow per-chip HBM/2."""
+    pb = param_bytes_estimate(abstract_params)
+    per_chip = pb / model_axis_size(mesh)
+    if kind == "train":
+        adam_mult = (2.0 if (tc and tc.adam_dtype == "bfloat16") else 4.0)
+        per_chip *= (1.0 + adam_mult)
+    return per_chip > HBM_BYTES / 2
+
+
+def param_specs(cfg: ModelConfig, abstract_params, mesh, *,
+                fsdp: Optional[bool] = None, kind: str = "train",
+                tc: Optional[TrainConfig] = None):
+    """PartitionSpec tree matching the params tree.
+
+    FSDP (weight sharding over data) applies only for *serving* of models
+    whose TP-sharded weights exceed HBM (kimi-class): in training, FSDP on
+    scan-stacked params makes GSPMD all-gather the full stacked array per
+    loop iteration (measured: 250s collective term on qwen3-14b). Training
+    memory relief comes from ZeRO-1 sharded optimizer state instead
+    (see train_shardings)."""
+    if fsdp is None:
+        fsdp = kind != "train" and decide_fsdp(
+            cfg, abstract_params, mesh, kind, tc)
+    ms = model_axis_size(mesh)
+    daxes = data_axes(mesh)
+    flat = flatten_with_paths(abstract_params)
+    specs = []
+    for path, leaf in flat:
+        spec = _leaf_spec(path, leaf.ndim)
+        if fsdp:
+            spec = _add_fsdp(spec, leaf.shape, daxes, ms,
+                             jax.numpy.dtype(leaf.dtype).itemsize)
+        spec = fix_spec(spec, leaf.shape, mesh)
+        specs.append(spec)
+    treedef = jax.tree.structure(abstract_params)
+    return jax.tree.unflatten(treedef, specs)
+
+
+def zero1_opt_specs(param_spec_tree, abstract_params, mesh):
+    """ZeRO-1: optimizer moments additionally sharded over the data axes
+    (one gather of params + one reduce-scatter of grads per step, OUTSIDE
+    the layer loop — unlike scan-FSDP)."""
+    daxes = data_axes(mesh)
+    ms = model_axis_size(mesh)
+    flat_p = flatten_with_paths(abstract_params)
+    flat_s = [s for _, s in flatten_with_paths(
+        jax.tree.map(lambda x: x, param_spec_tree,
+                     is_leaf=lambda x: isinstance(x, P)))]
+    out = []
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        s = _add_fsdp(spec, leaf.shape, daxes, ms, 4)
+        out.append(fix_spec(s, leaf.shape, mesh))
+    return jax.tree.unflatten(jax.tree.structure(abstract_params), out)
+
+
+def batch_axes(mesh, batch_size: int):
+    daxes = data_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    if daxes and batch_size % total == 0:
+        return daxes if len(daxes) > 1 else daxes[0]
+    if "data" in daxes and batch_size % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def batch_specs(batch_tree, mesh):
+    """Batch dict: leading dim is always global batch."""
+    def spec(path, leaf):
+        B = leaf.shape[0] if leaf.ndim else 1
+        ba = batch_axes(mesh, B)
+        return P(*([ba] + [None] * (leaf.ndim - 1))) if leaf.ndim else P()
+    flat = flatten_with_paths(batch_tree)
+    specs = [spec(p, l) for p, l in flat]
+    return jax.tree.unflatten(jax.tree.structure(batch_tree), specs)
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, mesh):
+    """KV/SSM cache sharding (see module docstring for the SP rule)."""
+    ms = model_axis_size(mesh)
+
+    def spec(path, leaf):
+        name = path.rsplit("/", 1)[-1]
+        if leaf.ndim == 0:
+            return P()
+        if name in ("k", "v", "cross_k", "cross_v") or name.endswith(
+                ("_k", "_v")):
+            # [L, B, S, Hkv, hd]
+            B = leaf.shape[1]
+            ba = batch_axes(mesh, B)
+            if cfg.num_kv_heads and cfg.num_kv_heads % ms == 0:
+                spec = P(None, ba, None, "model", None)
+            else:
+                spec = P(None, ba, "model", None, None)  # seq-parallel KV
+        elif name == "ssm":
+            B = leaf.shape[1]
+            ba = batch_axes(mesh, B)
+            H = leaf.shape[2]
+            hax = "model" if H % ms == 0 else None
+            spec = P(None, ba, hax, None, None)
+        elif name == "conv":
+            B = leaf.shape[1]
+            ba = batch_axes(mesh, B)
+            spec = P(None, ba, None, "model")
+        else:
+            return P()
+        return fix_spec(spec, leaf.shape, mesh)
+
+    flat = flatten_with_paths(cache_tree)
+    specs = [spec(p, l) for p, l in flat]
+    return jax.tree.unflatten(jax.tree.structure(cache_tree), specs)
+
+
+def to_named(tree_of_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Assembled sharding plans per step kind
+# ---------------------------------------------------------------------------
+
+def train_shardings(cfg: ModelConfig, mesh, abstract_params, abstract_opt,
+                    abstract_batch, tc: Optional[TrainConfig] = None,
+                    fsdp: Optional[bool] = None) -> Dict[str, Any]:
+    ps = param_specs(cfg, abstract_params, mesh, fsdp=fsdp, kind="train",
+                     tc=tc)
+    # ZeRO-1: moments sharded over data axes on top of the param TP spec;
+    # step counter replicated
+    zs = zero1_opt_specs(ps, abstract_params, mesh)
+    opt_spec = type(abstract_opt)(m=zs, v=zs, count=P())
+    bs = batch_specs(abstract_batch, mesh)
+    return {
+        "params": to_named(ps, mesh),
+        "opt": to_named(opt_spec, mesh),
+        "batch": to_named(bs, mesh),
+        "metrics": NamedSharding(mesh, P()),
+    }
+
+
+def serve_shardings(cfg: ModelConfig, mesh, abstract_params, abstract_cache,
+                    token_batch: int, fsdp: Optional[bool] = None
+                    ) -> Dict[str, Any]:
+    ps = param_specs(cfg, abstract_params, mesh, fsdp=fsdp, kind="serve")
+    cs = cache_specs(cfg, abstract_cache, mesh)
+    ba = batch_axes(mesh, token_batch)
+    return {
+        "params": to_named(ps, mesh),
+        "cache": to_named(cs, mesh),
+        "token": NamedSharding(mesh, P(ba, None)),
+        "logits": NamedSharding(mesh, P(ba, None, "model")),
+    }

@@ -1,0 +1,82 @@
+"""Core layers: norms, rotary embeddings, activations, MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+             use_pallas: bool = False) -> jnp.ndarray:
+    """RMSNorm in fp32, cast back to x.dtype. (1+w) convention NOT used."""
+    if use_pallas:
+        from repro.kernels.rmsnorm import ops as rms_ops
+        return rms_ops.rmsnorm(x, weight, eps=eps)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, fp32, shape [head_dim // 2]."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate pairs (x[..., :d/2], x[..., d/2:]).
+
+    x: [B, S, H, D]; positions: [B, S] (or [S]) int32.
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # [d/2]
+    pos = positions.astype(jnp.float32)
+    angles = pos[..., None] * inv  # [B, S, d/2]
+    cos = jnp.cos(angles)[..., None, :]  # [B, S, 1, d/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = xf1 * cos - xf2 * sin
+    out2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> np.ndarray:
+    """Whisper-encoder style sinusoidal positional embedding [S, D] (fp32)."""
+    half = d_model // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    pos = np.arange(seq_len)[:, None] * freqs[None, :]
+    return np.concatenate([np.sin(pos), np.cos(pos)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp(x: jnp.ndarray, wi_gate: jnp.ndarray, wi_up: jnp.ndarray,
+        wo: jnp.ndarray, act: str) -> jnp.ndarray:
+    """x: [..., d]; wi_*: [d, f]; wo: [f, d]."""
+    g = activation(jnp.einsum("...d,df->...f", x, wi_gate), act)
+    u = jnp.einsum("...d,df->...f", x, wi_up)
+    return jnp.einsum("...f,fd->...d", g * u, wo)

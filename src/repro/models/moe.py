@@ -1,0 +1,96 @@
+"""Top-k Mixture-of-Experts FFN (the *layer* kind, not the paper's predictor).
+
+Capacity-based grouped-GEMM formulation: tokens are scattered into a
+[E, C, d] buffer (static shapes, GSPMD-shardable: E over the 'model' axis =
+expert parallelism), each expert runs a dense SwiGLU, results are combined
+back with the router weights. Overflowing tokens beyond capacity C are
+dropped (standard capacity-factor semantics).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation
+
+
+class MoEOutput(NamedTuple):
+    y: jnp.ndarray          # [N, d]
+    aux_loss: jnp.ndarray   # scalar load-balancing loss
+    fraction_dropped: jnp.ndarray  # scalar, monitoring
+
+
+def router_topk(logits: jnp.ndarray, k: int):
+    """logits [N, E] -> (weights [N,k] fp32 normalized, idx [N,k] int32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, idx.astype(jnp.int32)
+
+
+def load_balance_loss(probs: jnp.ndarray, idx: jnp.ndarray, num_experts: int):
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    N = probs.shape[0]
+    counts = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(idx.size, 1)          # fraction routed per expert
+    p = jnp.mean(probs, axis=0)                    # mean router prob per expert
+    return num_experts * jnp.sum(f * p)
+
+
+def moe_ffn(
+    x: jnp.ndarray,          # [N, d] flattened tokens
+    w_router: jnp.ndarray,   # [d, E]
+    w_gate: jnp.ndarray,     # [E, d, f]
+    w_up: jnp.ndarray,       # [E, d, f]
+    w_down: jnp.ndarray,     # [E, f, d]
+    *,
+    k: int,
+    capacity_factor: float,
+    act: str = "silu",
+) -> MoEOutput:
+    N, d = x.shape
+    E = w_router.shape[1]
+    C = max(int(N * k * capacity_factor / E), 1)
+    # round capacity up to a multiple of 8 for layout friendliness
+    C = -(-C // 8) * 8
+
+    logits = jnp.einsum("nd,de->ne", x, w_router,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = router_topk(logits, k)          # [N,k]
+    aux = load_balance_loss(probs, idx, E)
+
+    # ---- slot assignment: position of each (token, expert) pair within its
+    # expert's capacity buffer, computed via a stable sort over expert ids.
+    flat_e = idx.reshape(-1)                       # [N*k]
+    flat_t = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)  # token per slot
+    flat_w = weights.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)       # group by expert
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts           # [E]
+    pos_in_e = jnp.arange(N * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos_in_e < C
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    tok = flat_t[order]
+    wgt = jnp.where(keep, flat_w[order], 0.0)
+    slot = jnp.where(keep, pos_in_e, C - 1)        # clipped; weight zeroed
+
+    # ---- dispatch: buf[e, c, :] = x[token assigned to (e, c)]
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[sorted_e, slot].set(
+        jnp.where(keep[:, None], x[tok], 0).astype(x.dtype), mode="drop")
+
+    # ---- expert computation (grouped GEMM on the MXU)
+    g = activation(jnp.einsum("ecd,edf->ecf", buf, w_gate), act)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    y_buf = jnp.einsum("ecf,efd->ecd", (g * u).astype(x.dtype), w_down)
+
+    # ---- combine back
+    y_slots = y_buf[sorted_e, slot]                # [N*k, d]
+    y = jnp.zeros((N, d), jnp.float32).at[tok].add(
+        y_slots.astype(jnp.float32) * wgt[:, None], mode="drop")
+    return MoEOutput(y.astype(x.dtype), aux, dropped)

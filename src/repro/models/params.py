@@ -1,0 +1,66 @@
+"""Parameter specification system.
+
+Models declare their parameters as a pytree of ``P`` specs (shape + init
+rule). The same spec tree produces either
+
+* ``jax.ShapeDtypeStruct`` stand-ins (dry-run: no allocation), or
+* initialized ``jnp`` arrays (smoke tests / real training),
+
+so the abstract and concrete paths can never drift apart.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed | small
+    axis: int = -2        # fan-in axis for fan_in init
+    scale: Optional[float] = None
+    dtype: Optional[str] = None
+
+
+def _init_leaf(spec: P, key, dtype) -> jnp.ndarray:
+    dt = jnp.dtype(spec.dtype or dtype)
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(shape, dt)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 1.0
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dt)
+    if spec.init == "small":
+        std = spec.scale if spec.scale is not None else 0.02
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dt)
+    # fan_in (default): std = scale / sqrt(fan_in)
+    fan_axis = spec.axis if spec.axis >= 0 else len(shape) + spec.axis
+    fan_in = shape[fan_axis] if shape else 1
+    std = (spec.scale if spec.scale is not None else 1.0) / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dt)
+
+
+def abstract_params(spec_tree, dtype: str):
+    """Spec tree -> ShapeDtypeStruct tree (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or dtype)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def init_params(spec_tree, rng, dtype: str):
+    """Spec tree -> initialized array tree."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    keys = jax.random.split(rng, max(len(leaves), 1))
+    out = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)

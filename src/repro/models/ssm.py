@@ -1,0 +1,219 @@
+"""Mamba2 (state-space duality) blocks: chunked train/prefill + O(1) decode.
+
+Reference chunked SSD in pure jnp (this is what the dry-run lowers); the
+Pallas kernel in ``repro.kernels.ssd_scan`` implements the intra-chunk part
+for TPU and is validated against this code.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+class SSMState(NamedTuple):
+    ssm: jnp.ndarray    # [B, H, P, N]
+    conv: jnp.ndarray   # [B, W-1, conv_channels]
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: [B,S,ch], w: [W,ch], b: [ch]."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x, shape=x.shape).astype(jnp.float32)
+    for i in range(W):
+        shift = W - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_step(cache: jnp.ndarray, x_t: jnp.ndarray, w: jnp.ndarray,
+              b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step of the causal conv. cache: [B, W-1, ch], x_t: [B, ch]."""
+    window = jnp.concatenate([cache, x_t[:, None]], axis=1)  # [B, W, ch]
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    new_cache = window[:, 1:]
+    return new_cache, y.astype(x_t.dtype)
+
+
+def ssd_chunked(
+    xb: jnp.ndarray,      # [B, S, H, P] dt-weighted inputs (x * dt)
+    a: jnp.ndarray,       # [B, S, H] log-decay per step (dt * A, A < 0)
+    B_mat: jnp.ndarray,   # [B, S, G, N]
+    C_mat: jnp.ndarray,   # [B, S, G, N]
+    *,
+    chunk: int,
+    initial_state: Optional[jnp.ndarray] = None,  # [B, H, P, N]
+    use_pallas: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    if use_pallas:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        return ssd_ops.ssd_scan(xb, a, B_mat, C_mat, chunk=chunk,
+                                initial_state=initial_state)
+    B, S, H, P = xb.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    assert H % G == 0
+    pad = (-S) % chunk
+    if pad:
+        xb = jnp.pad(xb, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc, Q = Sp // chunk, chunk
+    xb_c = xb.reshape(B, nc, Q, H, P)
+    a_c = a.reshape(B, nc, Q, H).astype(jnp.float32)
+    B_c = B_mat.reshape(B, nc, Q, G, N)
+    C_c = C_mat.reshape(B, nc, Q, G, N)
+
+    cum = jnp.cumsum(a_c, axis=2)                       # [B,nc,Q,H]
+    # broadcast groups to heads for the CB inner products
+    rep = H // G
+    Bh = jnp.repeat(B_c, rep, axis=3)                   # [B,nc,Q,H,N]
+    Ch = jnp.repeat(C_c, rep, axis=3)
+
+    # ---- intra-chunk (the "attention-like" quadratic-in-Q term)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,i,j,H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Ch.astype(jnp.float32),
+                    Bh.astype(jnp.float32))
+    M = cb * L                                          # [B,nc,i,j,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xb_c.astype(jnp.float32))
+
+    # ---- per-chunk terminal states
+    a_last = cum[:, :, -1, :]                           # [B,nc,H]
+    decay_out = jnp.exp(a_last[:, :, None, :] - cum)    # [B,nc,Q,H]
+    states = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn",
+                        decay_out, Bh.astype(jnp.float32),
+                        xb_c.astype(jnp.float32))       # [B,nc,H,P,N]
+
+    # ---- inter-chunk recurrence
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s_prev, inp):
+        st, al = inp                                    # [B,H,P,N], [B,H]
+        s_next = s_prev * jnp.exp(al)[:, :, None, None] + st
+        return s_next, s_prev
+
+    states_t = jnp.moveaxis(states, 1, 0)               # [nc,B,H,P,N]
+    a_last_t = jnp.moveaxis(a_last, 1, 0)                # [nc,B,H]
+    final, prev_states = jax.lax.scan(step, s0, (states_t, a_last_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp",
+                         Ch.astype(jnp.float32) * jnp.exp(cum)[..., None],
+                         prev_states)
+    y = (y_intra + y_inter).reshape(B, Sp, H, P)[:, :S]
+    return y.astype(xb.dtype), final
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,   # [B, H, P, N] fp32
+    x: jnp.ndarray,       # [B, H, P]
+    dt: jnp.ndarray,      # [B, H] (post-softplus)
+    A: jnp.ndarray,       # [H] (negative)
+    B_vec: jnp.ndarray,   # [B, G, N]
+    C_vec: jnp.ndarray,   # [B, G, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent update. Returns (new_state, y [B,H,P])."""
+    B, H, P, N = state.shape
+    G = B_vec.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_vec, rep, axis=1).astype(jnp.float32)  # [B,H,N]
+    Ch = jnp.repeat(C_vec, rep, axis=1).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32))              # [B,H]
+    xdt = x.astype(jnp.float32) * dtf[..., None]              # [B,H,P]
+    new_state = (state * decay[:, :, None, None]
+                 + xdt[..., None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return new_state, y
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg) -> dict:
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = di + 2 * G * N
+    return dict(di=di, H=H, G=G, N=N, P=cfg.ssm_head_dim, conv_ch=conv_ch,
+                in_dim=2 * di + 2 * G * N + H)
+
+
+def mamba2_block(p: dict, cfg, x: jnp.ndarray,
+                 state: Optional[SSMState] = None,
+                 *, decode: bool = False):
+    """Mamba2 block. x: [B,S,d] (S=1 when decode=True).
+
+    Returns (y [B,S,d], new_state | None).
+    """
+    d = mamba2_dims(cfg)
+    di, H, G, N, P = d["di"], d["H"], d["G"], d["N"], d["P"]
+    Bsz, S, _ = x.shape
+
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xBC_raw, dt_raw = jnp.split(proj, [di, 2 * di + 2 * G * N], axis=-1)
+
+    if decode:
+        assert state is not None and S == 1
+        new_conv, xBC_t = conv_step(state.conv, xBC_raw[:, 0], p["conv_w"],
+                                    p["conv_b"])
+        xBC = jax.nn.silu(xBC_t)[:, None]            # [B,1,conv_ch]
+    else:
+        xBC = jax.nn.silu(causal_conv1d(xBC_raw, p["conv_w"], p["conv_b"]))
+
+    x_ssm, B_mat, C_mat = jnp.split(xBC, [di, di + G * N], axis=-1)
+    x_ssm = x_ssm.reshape(Bsz, S, H, P)
+    B_mat = B_mat.reshape(Bsz, S, G, N)
+    C_mat = C_mat.reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # [H]
+
+    if decode:
+        new_ssm, y = ssd_decode_step(
+            state.ssm, x_ssm[:, 0], dt[:, 0], A, B_mat[:, 0], C_mat[:, 0])
+        y = y[:, None]                                         # [B,1,H,P]
+        new_state = SSMState(ssm=new_ssm, conv=new_conv)
+    else:
+        xb = x_ssm * dt[..., None].astype(x_ssm.dtype)
+        a = dt * A                                             # [B,S,H]
+        init = state.ssm if state is not None else None
+        y, final = ssd_chunked(xb, a, B_mat, C_mat, chunk=cfg.ssm_chunk,
+                               initial_state=init,
+                               use_pallas=cfg.use_pallas)
+        if state is not None:
+            new_state = SSMState(ssm=final,
+                                 conv=_conv_tail(xBC_raw, cfg.conv_width))
+        else:
+            new_state = None
+
+    y = y + x_ssm.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"]), new_state
+
+
+def _conv_tail(xBC_raw, width: int) -> jnp.ndarray:
+    """Last (width-1) *raw* (pre-conv, pre-silu) inputs — exactly what
+    ``conv_step`` expects as its rolling cache during decode."""
+    return xBC_raw[:, -(width - 1):]
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32) -> SSMState:
+    d = mamba2_dims(cfg)
+    return SSMState(
+        ssm=jnp.zeros((batch, d["H"], cfg.ssm_head_dim, d["N"]), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d["conv_ch"]), dtype),
+    )

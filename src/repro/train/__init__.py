@@ -1,0 +1,8 @@
+from repro.train.step import (  # noqa: F401
+    build_decode_step,
+    build_loss_fn,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+    build_train_step_compressed,
+)

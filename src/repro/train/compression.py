@@ -1,0 +1,53 @@
+"""Int8 error-feedback gradient compression.
+
+Models the accuracy path of compressed DP all-reduce: gradients are
+quantized to int8 with a per-tensor scale before the (conceptual) reduce
+and dequantized after; the quantization residual is carried in an error
+buffer and added back next step (error feedback keeps SGD/Adam unbiased
+in the long run). On a real fleet the int8 payload is what crosses ICI/
+DCN — a 4x collective-bytes reduction on the DP all-reduce, recorded as a
+collective-roofline lever in EXPERIMENTS.md.
+
+``tests/test_distributed.py`` additionally demonstrates the explicit
+shard_map + psum(int32) variant on 8 fake devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_buffer(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_ef(grads, error_buf):
+    """Apply int8 EF compression to a gradient pytree.
+
+    Returns (decompressed_grads, new_error_buf, bytes_ratio)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_buf)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_e

@@ -1,0 +1,48 @@
+"""Cross-entropy over (possibly vocab-sharded) logits.
+
+The logits einsum keeps the vocab dimension shardable over the 'model'
+axis; logsumexp reduces over vocab (GSPMD inserts the small all-reduce).
+Optional sequence chunking bounds the fp32 logits working set — a
+memory-roofline lever recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+
+
+def _ce_from_hidden(params, cfg, hidden, labels, mask):
+    logits = model_lib.lm_logits(params, cfg, hidden)  # [B,S,V] fp32
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def lm_loss(params, cfg, hidden: jnp.ndarray, labels: jnp.ndarray,
+            loss_mask: Optional[jnp.ndarray] = None,
+            seq_chunks: int = 1) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token CE. hidden: [B,S,d]; labels: [B,S] (already shifted by
+    the data pipeline: labels[t] = target for position t)."""
+    B, S, _ = hidden.shape
+    mask = (jnp.ones((B, S), jnp.float32) if loss_mask is None
+            else loss_mask.astype(jnp.float32))
+    if seq_chunks > 1 and S % seq_chunks == 0:
+        c = S // seq_chunks
+        tot = jnp.zeros((), jnp.float32)
+        cnt = jnp.zeros((), jnp.float32)
+        for i in range(seq_chunks):
+            t, n = _ce_from_hidden(params, cfg,
+                                   hidden[:, i * c:(i + 1) * c],
+                                   labels[:, i * c:(i + 1) * c],
+                                   mask[:, i * c:(i + 1) * c])
+            tot, cnt = tot + t, cnt + n
+    else:
+        tot, cnt = _ce_from_hidden(params, cfg, hidden, labels, mask)
+    denom = jnp.maximum(cnt, 1.0)
+    loss = tot / denom
+    return loss, {"ce_loss": loss, "tokens": cnt}

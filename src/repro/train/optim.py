@@ -1,0 +1,96 @@
+"""AdamW + LR schedules, from scratch (no optax on the box).
+
+State layout mirrors params exactly (pytree of {m, v}) so the sharding
+rules that apply to a parameter apply verbatim to its optimizer moments —
+this is what lets ZeRO-style sharded optimizer state fall out of the
+PartitionSpec rules for free.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    m: Any           # first moment, pytree like params
+    v: Any           # second moment, pytree like params
+    count: jnp.ndarray  # step counter, int32 scalar
+
+
+def init_opt_state(params, tc: TrainConfig) -> OptState:
+    dt = jnp.dtype(tc.adam_dtype)
+    zeros = lambda p: jax.tree.map(  # noqa: E731
+        lambda x: jnp.zeros(x.shape, dt), p)
+    return OptState(m=zeros(params), v=zeros(params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def abstract_opt_state(params, tc: TrainConfig) -> OptState:
+    dt = jnp.dtype(tc.adam_dtype)
+    mk = lambda p: jax.tree.map(  # noqa: E731
+        lambda x: jax.ShapeDtypeStruct(x.shape, dt), p)
+    return OptState(m=mk(params), v=mk(params),
+                    count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def cosine_schedule(tc: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to 10% of peak."""
+    stepf = step.astype(jnp.float32)
+    warm = jnp.minimum(stepf / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    frac = jnp.clip((stepf - tc.warmup_steps)
+                    / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adamw_update(params, grads, state: OptState, tc: TrainConfig
+                 ) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    count = state.count + 1
+    lr = cosine_schedule(tc, count)
+    b1, b2, eps = tc.beta1, tc.beta2, tc.eps
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+    sdt = jnp.dtype(tc.adam_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps) + tc.weight_decay * (
+            p.astype(jnp.float32))
+        newp = p.astype(jnp.float32) - lr * step
+        return newp.astype(p.dtype), mf.astype(sdt), vf.astype(sdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(new_m, new_v, count), metrics

@@ -1,0 +1,6 @@
+from repro.utils.tree import (  # noqa: F401
+    tree_size,
+    tree_bytes,
+    tree_map_with_path,
+    flatten_with_paths,
+)

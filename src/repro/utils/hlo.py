@@ -1,0 +1,102 @@
+"""HLO-text analysis: collective-bytes accounting for the roofline.
+
+``cost_analysis()`` has no collective term, so we parse the
+post-partitioning HLO: build a name->bytes map from instruction
+definitions, then sum *operand* sizes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), per op kind.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# shape like  bf16[8,128,2048]{2,1,0:T(8,128)}  or  f32[] or pred[4]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# instruction definition:  %name = <shape-or-tuple> opcode(...)
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every shape literal in ``text`` (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",")]))
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: {"count": n, "bytes": operand bytes (per device)}.
+
+    Returns {kind: {count, bytes}, "total": {count, bytes}}.
+    """
+    sizes: Dict[str, int] = {}
+    pending = []  # (kind, [operand names])
+
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # the shape(s) of this instruction = everything before the opcode;
+        # cheapest robust approach: bytes of the first shape-literal run.
+        # Definition lines always start with the result shape.
+        opcode_m = re.search(r"\)?\s*([a-z][\w\-]*)\(", rest)
+        head = rest[: opcode_m.start()] if opcode_m else rest
+        sizes[name] = _shape_bytes(head)
+        if opcode_m:
+            op = opcode_m.group(1)
+            base = None
+            for c in COLLECTIVE_OPS:
+                if op == c or op.startswith(c + "-"):  # e.g. all-reduce-start
+                    base = c
+                    break
+            if base is not None and not op.endswith("-done"):
+                args = rest[opcode_m.end() - 1:]
+                operands = re.findall(r"%([\w.\-]+)", args)
+                pending.append((base, operands))
+
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0.0})
+    for kind, operands in pending:
+        b = sum(sizes.get(o, 0) for o in operands)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += float(b)
+    total = {"count": sum(v["count"] for v in out.values()),
+             "bytes": sum(v["bytes"] for v in out.values())}
+    result = dict(out)
+    result["total"] = total
+    return result
+
+
+def count_ops(hlo_text: str, opcodes=("dot", "fusion", "while", "scatter",
+                                      "gather", "transpose", "reshape")
+              ) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        opcode_m = re.search(r"\)?\s*([a-z][\w\-]*)\(", m.group(2))
+        if opcode_m and opcode_m.group(1) in opcodes:
+            counts[opcode_m.group(1)] += 1
+    return dict(counts)

@@ -1,0 +1,408 @@
+"""Loop-aware static analysis of post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+silently undercounts every scan-over-layers model by ~L x. This analyzer
+walks the computation graph from ENTRY, multiplying costs by loop trip
+counts (XLA annotates scans with ``known_trip_count`` in backend_config;
+we fall back to s32 constants in the init tuple, then to 1):
+
+  * flops            — 2 * prod(result dims) * prod(contracting dims)
+                       per ``dot`` (matmul-dominated models; elementwise
+                       flops are negligible and excluded, matching how
+                       roofline compute terms are conventionally quoted)
+  * hbm bytes        — per instruction: result + operand bytes
+                       (fusions count their boundary only, like XLA)
+  * collective bytes — operand bytes per collective op kind
+
+All numbers are per-device (the HLO is the per-partition SPMD module).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'known_trip_count\\?":?\s*\{\\?"?n\\?"?:\\?"?(\d+)')
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "call",
+    "conditional", "iota", "add-dependency", "opt-barrier", "domain",
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = int(np.prod([int(d) for d in dims.split(",")])) if dims else 1
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Instr:
+    name: str
+    shape_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    raw_operands: str = ""
+    is_root: bool = False
+
+
+@dataclass
+class Comp:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+def _split_def(rest: str):
+    """rest = everything after '%name = '. Returns (shape_str, opcode,
+    operand_names, attrs)."""
+    rest = _COMMENT_RE.sub("", rest)
+    # result shape: tuple -> balanced parens; else dtype[dims]{layout}
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape_str = rest[: i + 1]
+                    tail = rest[i + 1:].lstrip()
+                    break
+        else:
+            return rest, "", [], "", ""
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return rest, "", [], "", ""
+        shape_str = rest[:sp]
+        tail = rest[sp + 1:].lstrip()
+    m = re.match(r"([\w\-]+)\(", tail)
+    if not m:
+        return shape_str, "", [], "", ""
+    opcode = m.group(1)
+    # operand group: balanced parens starting at m.end()-1
+    start = m.end() - 1
+    depth = 0
+    for i in range(start, len(tail)):
+        if tail[i] == "(":
+            depth += 1
+        elif tail[i] == ")":
+            depth -= 1
+            if depth == 0:
+                operand_str = tail[start + 1: i]
+                attrs = tail[i + 1:]
+                break
+    else:
+        operand_str, attrs = "", ""
+    operands = re.findall(r"%([\w.\-]+)", operand_str)
+    return shape_str, opcode, operands, attrs, operand_str
+
+
+def parse_module(hlo_text: str) -> Dict[str, Comp]:
+    comps: Dict[str, Comp] = {}
+    cur: Optional[Comp] = None
+    entry_name = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = Comp(m.group(2))
+                if m.group(1):
+                    entry_name = m.group(2)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        shape_str, opcode, operands, attrs, raw_ops = _split_def(rest)
+        inst = Instr(name, shape_str, opcode, operands, attrs, raw_ops,
+                     is_root="ROOT" in line.split("=")[0])
+        cur.instrs.append(inst)
+        cur.shapes[name] = shape_str
+    if cur is not None:
+        comps[cur.name] = cur
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _dot_flops(inst: Instr, comp: Comp) -> float:
+    res_dims = _first_shape_dims(inst.shape_str) or []
+    lhs_shape = comp.shapes.get(inst.operands[0], "") if inst.operands else ""
+    lhs_dims = _first_shape_dims(lhs_shape) or []
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
+    contract = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * float(np.prod(res_dims) if res_dims else 1) * contract
+
+
+def _trip_count(inst: Instr, comp: Comp) -> int:
+    m = _TRIP_RE.search(inst.attrs)
+    if m:
+        return int(m.group(1))
+    # fallback: largest s32[] constant feeding the init tuple
+    best = 1
+    if inst.operands:
+        init = inst.operands[0]
+        tup = next((i for i in comp.instrs if i.name == init), None)
+        if tup is not None and tup.opcode == "tuple":
+            for op in tup.operands:
+                d = next((i for i in comp.instrs if i.name == op), None)
+                if d is not None and d.opcode == "constant" \
+                        and d.shape_str.startswith("s32[]"):
+                    mm = re.search(r"constant\((\d+)\)",
+                                   d.attrs or "")
+                    if mm:
+                        best = max(best, int(mm.group(1)))
+    return best
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    loops: List[Dict] = field(default_factory=list)
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "collective_total_bytes": self.total_collective_bytes,
+            "loops": self.loops,
+        }
+
+
+def analyze(hlo_text: str) -> HloCost:
+    comps = parse_module(hlo_text)
+    cost = HloCost()
+    entry = comps.get("__entry__")
+    if entry is None:
+        return cost
+    seen_stack = set()
+
+    def op_bytes(inst: Instr, comp: Comp) -> float:
+        """Effective HBM traffic of one instruction.
+
+        Slicing/indexed ops only touch the slice, not the whole operand:
+          dynamic-slice / slice    -> 2 x result               (read+write)
+          dynamic-update-slice     -> 2 x update operand        (in-place)
+          gather                   -> 2 x result + indices
+          scatter                  -> 2 x updates + indices
+        Everything else: result + all operands (XLA convention)."""
+        res = float(_shape_bytes(inst.shape_str))
+        ob = [float(_shape_bytes(comp.shapes.get(o, "")))
+              for o in inst.operands]
+        op = inst.opcode
+        if op in ("dynamic-slice", "slice"):
+            return 2.0 * res
+        if op == "dynamic-update-slice":
+            upd = ob[1] if len(ob) > 1 else 0.0
+            return 2.0 * upd
+        if op == "gather":
+            idx = ob[1] if len(ob) > 1 else 0.0
+            return 2.0 * res + idx
+        if op == "scatter":
+            upd = ob[2] if len(ob) > 2 else res
+            idx = ob[1] if len(ob) > 1 else 0.0
+            return 2.0 * upd + idx
+        return res + sum(ob)
+
+    def fusion_bytes(inst: Instr, comp: Comp, body: Optional[Comp]) -> float:
+        """Fusion boundary traffic, with slice- and alias-aware parameter
+        accounting:
+          * a parameter consumed ONLY by (dynamic-)slice/gather ops
+            contributes the sliced sizes, not the full array (XLA fuses
+            KV-cache slicing into loop-body fusions);
+          * a ROOT dynamic-update-slice / scatter writes in place: count
+            the update bytes, not the full result, and the scattered-into
+            parameter costs nothing (aliased).
+        Without these, a scan-over-layers cache/buffer update is charged
+        ~L x its true traffic."""
+        res = float(_shape_bytes(inst.shape_str))
+        if body is None:
+            return res + sum(float(_shape_bytes(comp.shapes.get(o, "")))
+                             for o in inst.operands)
+        pidx: Dict[str, int] = {}
+        for bi in body.instrs:
+            if bi.opcode == "parameter":
+                mm = re.search(r"^\s*(\d+)", bi.raw_operands or "")
+                if mm:
+                    pidx[bi.name] = int(mm.group(1))
+        sliced_only: Dict[str, float] = {}
+        full_needed = set()
+        aliased = set()
+        for bi in body.instrs:
+            for o in bi.operands:
+                if o in pidx:
+                    if bi.opcode in ("dynamic-slice", "slice", "gather") \
+                            and bi.operands and bi.operands[0] == o:
+                        sliced_only[o] = sliced_only.get(o, 0.0) + float(
+                            _shape_bytes(bi.shape_str))
+                    else:
+                        full_needed.add(o)
+
+        root = next((bi for bi in body.instrs if bi.is_root),
+                    body.instrs[-1] if body.instrs else None)
+
+        def _inplace_root(r):
+            """Follow converts/bitcasts up from the root to a DUS/scatter."""
+            seen = 0
+            while r is not None and seen < 4:
+                if r.opcode in ("dynamic-update-slice", "scatter"):
+                    return r
+                if r.opcode in ("convert", "bitcast", "copy") and r.operands:
+                    r = next((bi for bi in body.instrs
+                              if bi.name == r.operands[0]), None)
+                    seen += 1
+                    continue
+                return None
+            return None
+
+        ir = _inplace_root(root)
+        if ir is not None:
+            upd_idx = 1 if ir.opcode == "dynamic-update-slice" else 2
+            if len(ir.operands) > upd_idx:
+                upd = float(_shape_bytes(
+                    body.shapes.get(ir.operands[upd_idx], "")))
+                res = min(res, 2.0 * upd)
+            # the updated-into operand is aliased (no read of the rest)
+            if ir.operands and ir.operands[0] in pidx:
+                aliased.add(ir.operands[0])
+        total = res
+        for pname, idx in pidx.items():
+            if idx >= len(inst.operands):
+                continue
+            if pname in aliased and pname not in sliced_only:
+                continue
+            full = float(_shape_bytes(
+                comp.shapes.get(inst.operands[idx], "")))
+            if pname in full_needed and pname not in aliased:
+                total += full
+            elif pname in sliced_only:
+                total += min(sliced_only[pname], full)
+            elif pname not in aliased:
+                total += full
+        return total
+
+    def visit(comp: Comp, mult: float, flops_only: bool = False):
+        if comp.name in seen_stack:
+            return  # defensive: no recursion in valid HLO
+        seen_stack.add(comp.name)
+        for inst in comp.instrs:
+            op = inst.opcode
+            if not op:
+                continue
+            if op == "while":
+                trip = _trip_count(inst, comp)
+                cost.loops.append({"name": inst.name, "trip": trip,
+                                   "mult": mult})
+                body = re.search(r"body=%([\w.\-]+)", inst.attrs)
+                cond = re.search(r"condition=%([\w.\-]+)", inst.attrs)
+                if body and body.group(1) in comps:
+                    visit(comps[body.group(1)], mult * trip, flops_only)
+                if cond and cond.group(1) in comps:
+                    visit(comps[cond.group(1)], mult * trip, True)
+                continue
+            if op == "call":
+                t = re.search(r"to_apply=%([\w.\-]+)", inst.attrs)
+                if t and t.group(1) in comps:
+                    visit(comps[t.group(1)], mult, flops_only)
+                continue
+            if op == "conditional":
+                for cname in re.findall(r"%([\w.\-]+)", inst.attrs):
+                    if cname in comps:
+                        visit(comps[cname], mult, flops_only)
+                continue
+            base = None
+            for c in COLLECTIVE_KINDS:
+                if op == c or op.startswith(c + "-"):
+                    base = c
+                    break
+            if base is not None:
+                if op.endswith("-done"):
+                    continue
+                ob = sum(float(_shape_bytes(comp.shapes.get(o, "")))
+                         for o in inst.operands)
+                cost.collective_bytes[base] = (
+                    cost.collective_bytes.get(base, 0.0) + ob * mult)
+                cost.collective_counts[base] = (
+                    cost.collective_counts.get(base, 0.0) + mult)
+                continue
+            if op == "dot":
+                cost.flops += _dot_flops(inst, comp) * mult
+                if not flops_only:
+                    b = op_bytes(inst, comp) * mult
+                    cost.hbm_bytes += b
+                    cost.bytes_by_op["dot"] = (
+                        cost.bytes_by_op.get("dot", 0.0) + b)
+                continue
+            if op == "fusion":
+                fc = re.search(r"calls=%([\w.\-]+)", inst.attrs)
+                body = comps.get(fc.group(1)) if fc else None
+                if body is not None:
+                    visit(body, mult, True)  # count dots inside fusions
+                if not flops_only:
+                    b = fusion_bytes(inst, comp, body) * mult
+                    cost.hbm_bytes += b
+                    cost.bytes_by_op["fusion"] = (
+                        cost.bytes_by_op.get("fusion", 0.0) + b)
+                continue
+            if op in _SKIP_BYTES_OPS:
+                continue
+            if not flops_only:
+                b = op_bytes(inst, comp) * mult
+                cost.hbm_bytes += b
+                cost.bytes_by_op[op] = cost.bytes_by_op.get(op, 0.0) + b
+        seen_stack.discard(comp.name)
+
+    visit(entry, 1.0)
+    return cost

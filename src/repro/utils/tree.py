@@ -1,0 +1,46 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn, tree):
+    """Map ``fn(path_str, leaf)`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: fn(_path_str(path), x), tree
+    )
+
+
+def flatten_with_paths(tree):
+    """Return [(path_str, leaf), ...] for a pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(path), leaf) for path, leaf in flat]

@@ -1,0 +1,89 @@
+"""Property-based tests (hypothesis) for the memory-function experts."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import experts
+from repro.core.experts import MemoryFunction, calibrate_two_point
+
+FAMS = st.sampled_from(experts.FAMILIES)
+POS = st.floats(min_value=0.1, max_value=50.0, allow_nan=False)
+
+
+def _fn(family, m, b):
+    if family == "power":
+        return MemoryFunction("power", m, min(max(b, 0.1), 0.9))
+    if family == "exp_saturation":
+        return MemoryFunction("exp_saturation", m * 10, min(b, 0.5) / 10)
+    if family == "log":
+        return MemoryFunction("log", m + 5.0, min(max(b, 0.3), 5.0))
+    return MemoryFunction("affine", m, b / 10)
+
+
+@settings(max_examples=60, deadline=None)
+@given(FAMS, POS, POS, st.floats(min_value=1.0, max_value=100.0))
+def test_two_point_calibration_exact_on_clean_data(family, m, b, x1):
+    """Noiseless two-point calibration recovers the function (the paper's
+    runtime path)."""
+    fn = _fn(family, m, b)
+    x2 = x1 * 2.0
+    y1, y2 = float(fn(x1)), float(fn(x2))
+    if y2 <= y1 * 1.03:  # saturated probes -> guarded path, skip exactness
+        return
+    cal = calibrate_two_point(family, x1, y1, x2, y2)
+    for x in [x1 * 0.5, x1, x2, x2 * 2.0]:
+        t, p = float(fn(x)), float(cal(x))
+        assert abs(p - t) / max(abs(t), 1e-6) < 0.05, (family, x, t, p)
+
+
+@settings(max_examples=60, deadline=None)
+@given(FAMS, POS, POS, st.floats(min_value=0.5, max_value=60.0))
+def test_inverse_property(family, m, b, budget):
+    """x* = f^-1(y) satisfies f(x*) <~ y (allocation ~never over-budget;
+    2% slack covers pow-roundtrip error at extreme 1/b exponents)."""
+    fn = _fn(family, m, b)
+    x = fn.inverse(budget)
+    if np.isfinite(x) and x > 0:
+        assert float(fn(x)) <= budget * 1.02 + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(FAMS, POS, POS)
+def test_best_family_recovers_generator(family, m, b):
+    """Offline fitting identifies the generating family (or an
+    indistinguishable one) on clean curves."""
+    fn = _fn(family, m, b)
+    xs = np.geomspace(0.1, 1000.0, 12)
+    ys = np.asarray(fn(xs))
+    if np.any(ys <= 0):
+        return
+    best, errs = experts.best_family(xs, ys)
+    assert errs[family] < 0.05  # generator always fits well
+    assert min(errs.values()) == errs[best.family]
+
+
+@settings(max_examples=40, deadline=None)
+@given(FAMS, POS, POS)
+def test_fit_matches_curve(family, m, b):
+    fn = _fn(family, m, b)
+    xs = np.geomspace(0.2, 500.0, 10)
+    ys = np.asarray(fn(xs))
+    if np.any(ys <= 0):
+        return
+    fit = experts.fit(family, xs, ys)
+    assert experts.relative_error(fit, xs, ys) < 0.05
+
+
+def test_exp_saturation_guard():
+    """Flat probe pairs (saturated curve + noise) must NOT produce absurd
+    m (the OOM-storm regression test)."""
+    cal = calibrate_two_point("exp_saturation", 50.0, 20.0, 100.0, 20.1)
+    assert cal.m < 100.0
+    assert 15.0 < float(cal(1000.0)) < 30.0
+
+
+def test_monotonicity():
+    for fam in experts.FAMILIES:
+        fn = _fn(fam, 5.0, 2.0)
+        xs = np.geomspace(0.1, 100, 50)
+        ys = np.asarray(fn(xs))
+        assert np.all(np.diff(ys) >= -1e-9), fam

@@ -1,0 +1,93 @@
+"""Loop-aware HLO analyzer: trip counts, dot flops, collective bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.hlo_analyzer import analyze, parse_module
+
+SYNTH = """
+HloModule test, is_scheduled=true
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%y), replica_groups=[4]<=[4], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%ni, %ar)
+}
+
+%cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]{1,0}) tuple(%zero, %a)
+  %w2 = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_synthetic_module_loop_accounting():
+    cost = analyze(SYNTH)
+    # one dot of 2*8*16*16 flops, executed 12 times
+    assert cost.flops == 2 * 8 * 16 * 16 * 12
+    # one all-reduce of 8*16*4 bytes, 12 times
+    assert cost.collective_bytes["all-reduce"] == 8 * 16 * 4 * 12
+    assert cost.collective_counts["all-reduce"] == 12
+    assert cost.loops and cost.loops[0]["trip"] == 12
+
+
+def test_trip_count_fallback_from_init_constant():
+    txt = SYNTH.replace(', backend_config={"known_trip_count":{"n":"12"}}',
+                        "")
+    cost = analyze(txt)
+    # falls back to the s32 constant in the init tuple... init has 0 only;
+    # the bound constant (12) lives in the condition — fallback yields >= 1
+    assert cost.loops[0]["trip"] >= 1
+
+
+def test_parse_module_structure():
+    comps = parse_module(SYNTH)
+    assert "__entry__" in comps
+    assert any(i.opcode == "while" for i in comps["__entry__"].instrs)
+
+
+def test_real_scan_module_flops_scale_with_depth():
+    """Flops of a scanned stack scale ~linearly with layer count."""
+    def make(n_layers):
+        def f(w, x):
+            def body(h, wl):
+                return jnp.tanh(h @ wl), None
+            h, _ = jax.lax.scan(body, x, w)
+            return h
+        w = jnp.zeros((n_layers, 32, 32), jnp.float32)
+        x = jnp.zeros((8, 32), jnp.float32)
+        return jax.jit(f).lower(w, x).compile().as_text()
+
+    c4 = analyze(make(4))
+    c8 = analyze(make(8))
+    assert c4.flops > 0
+    ratio = c8.flops / c4.flops
+    assert 1.7 < ratio < 2.3, ratio
+
+
+def test_gather_bytes_not_full_table():
+    """Embedding gather counts the gathered rows, not the whole table."""
+    def f(table, ids):
+        return table[ids]
+    table = jnp.zeros((50_000, 64), jnp.float32)
+    ids = jnp.zeros((8,), jnp.int32)
+    txt = jax.jit(f).lower(table, ids).compile().as_text()
+    cost = analyze(txt)
+    table_bytes = 50_000 * 64 * 4
+    assert cost.hbm_bytes < table_bytes * 0.5

@@ -1,0 +1,174 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+    (1, 64, 2, 2, 16), (2, 96, 4, 2, 32), (1, 128, 8, 1, 64),
+    (2, 80, 4, 4, 16),  # padded (80 % 32 != 0)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, Hq, Hkv, D, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jnp.asarray(rng.normal(0, 1, (B, S, Hq, D)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), dtype)
+    out = flash_attention(q, k, v, blk_q=32, blk_k=32)
+    ref = jnp.moveaxis(attention_ref(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        scale=D ** -0.5), 1, 2)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("window,softcap,causal", [
+    (16, 0.0, True), (0, 30.0, True), (32, 50.0, True), (0, 0.0, False),
+])
+def test_flash_attention_variants(window, softcap, causal):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    B, S, Hq, Hkv, D = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.normal(0, 1, (B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          attn_softcap=softcap, blk_q=32, blk_k=32)
+    ref = jnp.moveaxis(attention_ref(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        scale=D ** -0.5, causal=causal, window=window, softcap=softcap),
+        1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,ln", [
+    (1, 64, 2, 2, 16, 10), (2, 96, 8, 2, 32, 95), (1, 64, 4, 1, 64, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, S, Hq, Hkv, D, ln, dtype):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, Hq, D)), dtype)
+    kc = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), dtype)
+    vc = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), dtype)
+    out = decode_attention(q, kc, vc, ln, blk_k=32)
+    ref = jnp.moveaxis(decode_attention_ref(
+        jnp.moveaxis(q, 2, 1), kc, vc, jnp.full((B,), ln + 1, jnp.int32),
+        scale=D ** -0.5), 1, 2)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_decode_attention_matches_model_path():
+    """Kernel agrees with the model's own decode_attention (XLA path)."""
+    from repro.kernels.decode_attention.ops import decode_attention as kd
+    from repro.models.attention import decode_attention as md
+    B, S, Hq, Hkv, D, ln = 2, 64, 4, 2, 16, 21
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, Hq, D)), jnp.float32)
+    kc = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    vc = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    a = kd(q, kc, vc, ln, blk_k=32)
+    b = md(q, kc, vc, jnp.asarray(ln), use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan (Mamba2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+    (1, 64, 2, 16, 1, 16, 16), (2, 48, 4, 8, 2, 8, 16),
+    (1, 40, 2, 16, 1, 32, 16),  # padded
+])
+def test_ssd_scan_sweep(B, S, H, P, G, N, chunk):
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    xb = jnp.asarray(rng.normal(0, 0.5, (B, S, H, P)), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(0, 0.3, (B, S, H))), jnp.float32)
+    Bm = jnp.asarray(rng.normal(0, 0.5, (B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(0, 0.5, (B, S, G, N)), jnp.float32)
+    y, st = ssd_scan(xb, a, Bm, Cm, chunk=chunk)
+    yr, sr = ssd_scan_ref(xb, a, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), atol=1e-4)
+
+
+def test_ssd_scan_initial_state():
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    B, S, H, P, G, N, chunk = 1, 48, 2, 8, 1, 16, 16
+    xb = jnp.asarray(rng.normal(0, 0.5, (B, S, H, P)), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(0, 0.3, (B, S, H))), jnp.float32)
+    Bm = jnp.asarray(rng.normal(0, 0.5, (B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(0, 0.5, (B, S, G, N)), jnp.float32)
+    init = jnp.asarray(rng.normal(0, 0.5, (B, H, P, N)), jnp.float32)
+    y, st = ssd_scan(xb, a, Bm, Cm, chunk=chunk, initial_state=init)
+    yr, sr = ssd_scan_ref(xb, a, Bm, Cm, chunk=chunk, initial_state=init)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), atol=1e-4)
+
+
+def test_ssd_scan_chunk_invariance():
+    """Same result regardless of chunk size (associativity of the scan)."""
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    B, S, H, P, G, N = 1, 64, 2, 8, 1, 8
+    xb = jnp.asarray(rng.normal(0, 0.5, (B, S, H, P)), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(0, 0.3, (B, S, H))), jnp.float32)
+    Bm = jnp.asarray(rng.normal(0, 0.5, (B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(0, 0.5, (B, S, G, N)), jnp.float32)
+    y16, s16 = ssd_scan(xb, a, Bm, Cm, chunk=16)
+    y32, s32 = ssd_scan(xb, a, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y32), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s16), np.asarray(s32), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 37, 64), (2, 5, 7, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+    x = jnp.asarray(rng.normal(0, 1, shape), dtype)
+    w = jnp.asarray(rng.normal(1, 0.1, shape[-1:]), dtype)
+    out = rmsnorm(x, w, blk=16)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_model_attention_uses_flash_when_enabled():
+    """cfg.use_pallas routes prefill attention through the kernel and the
+    result matches the XLA path."""
+    from repro.configs import get_config
+    from repro.models import model
+    cfg = get_config("qwen3-14b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    params = model.init(cfg, jax.random.key(0))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32)
+    h1, _ = model.forward_train(params, cfg, {"tokens": tokens})
+    h2, _ = model.forward_train(params, cfg.replace(use_pallas=True),
+                                {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-3)

@@ -1,0 +1,121 @@
+"""Per-arch smoke tests (reduced configs): forward/train/prefill/decode on
+CPU, output shapes + no NaNs; decode==forward consistency for a
+representative subset."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_shape, concrete_inputs
+from repro.models import model
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    params = model.init(cfg, jax.random.key(0))
+    batch = concrete_inputs(cfg, smoke_shape("train"))
+    h, aux = model.forward_train(params, cfg, batch)
+    logits = model.lm_logits(params, cfg, h)
+    B = batch["tokens"].shape[0]
+    assert h.shape[0] == B and h.shape[-1] == cfg.d_model
+    assert logits.shape[-1] == cfg.vocab_size
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    params = model.init(cfg, jax.random.key(0))
+    pbatch = concrete_inputs(cfg, smoke_shape("prefill"))
+    pbatch.pop("labels", None)
+    pbatch.pop("loss_mask", None)
+    last, cache = model.prefill(params, cfg, pbatch, max_len=48)
+    assert not bool(jnp.isnan(last).any())
+    tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    for _ in range(2):
+        lg, cache = model.decode_step(params, cfg, cache, tok)
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        assert not bool(jnp.isnan(lg).any())
+    assert int(cache["len"]) == pbatch["tokens"].shape[1] + (
+        pbatch.get("patch_embeds").shape[1]
+        if "patch_embeds" in pbatch else 0) + 2
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "gemma2-27b", "mamba2-780m",
+                                  "zamba2-2.7b", "whisper-large-v3"])
+def test_decode_matches_forward(arch):
+    """prefill(t[:k]) + decode(t[k:]) logits == full forward logits."""
+    cfg = get_config(arch, smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    params = model.init(cfg, jax.random.key(1))
+    rng = np.random.default_rng(0)
+    B, S, K = 2, 16, 10
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": tokens}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jnp.asarray(
+            rng.normal(0, 0.1, (B, 8, cfg.d_model)), jnp.float32)
+    h, _ = model.forward_train(params, cfg, batch)
+    full = model.lm_logits(params, cfg, h)
+    pb = dict(batch, tokens=tokens[:, :K])
+    last, cache = model.prefill(params, cfg, pb, max_len=S + 4)
+    errs = [float(jnp.max(jnp.abs(last[:, 0] - full[:, K - 1])))]
+    for i in range(K, S):
+        lg, cache = model.decode_step(params, cfg, cache,
+                                      tokens[:, i:i + 1])
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, i]))))
+    assert max(errs) < 2e-3, errs
+
+
+def test_moe_decode_matches_forward_with_nodrop_capacity():
+    """MoE consistency requires drop-free capacity (documented semantics:
+    capacity drops depend on the token population)."""
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32",
+        capacity_factor=16.0)
+    params = model.init(cfg, jax.random.key(1))
+    rng = np.random.default_rng(0)
+    B, S, K = 2, 16, 10
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    h, _ = model.forward_train(params, cfg, {"tokens": tokens})
+    full = model.lm_logits(params, cfg, h)
+    last, cache = model.prefill(params, cfg, {"tokens": tokens[:, :K]},
+                                max_len=S + 2)
+    errs = [float(jnp.max(jnp.abs(last[:, 0] - full[:, K - 1])))]
+    for i in range(K, S):
+        lg, cache = model.decode_step(params, cfg, cache,
+                                      tokens[:, i:i + 1])
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, i]))))
+    assert max(errs) < 2e-3, errs
+
+
+def test_param_counts_match_advertised_scale():
+    """Full configs land near their advertised parameter counts."""
+    from repro.utils.tree import tree_size
+    expected = {
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "qwen3-14b": (12e9, 16e9),
+        "deepseek-coder-33b": (30e9, 36e9),
+        "gemma2-27b": (24e9, 30e9),
+        "qwen3-moe-30b-a3b": (26e9, 34e9),
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "mamba2-780m": (0.6e9, 1.0e9),
+        "zamba2-2.7b": (2.2e9, 3.3e9),
+        "pixtral-12b": (10e9, 14e9),
+        "whisper-large-v3": (1.2e9, 2.1e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg = get_config(arch)
+        n = tree_size(model.abstract(cfg))
+        assert lo <= n <= hi, (arch, n / 1e9)
+
+
+def test_abstract_and_init_agree():
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    abst = model.abstract(cfg)
+    conc = model.init(cfg, jax.random.key(0))
+    fa = jax.tree.map(lambda x: (x.shape, str(x.dtype)), abst)
+    fc = jax.tree.map(lambda x: (x.shape, str(x.dtype)), conc)
+    assert fa == fc

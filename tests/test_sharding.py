@@ -1,0 +1,113 @@
+"""Sharding-rule validity for every arch: specs divide, no duplicate axes,
+ZeRO-1 opt specs well-formed. Uses a fake small mesh (no 512 devices)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, input_specs
+from repro.launch import sharding as shd
+from repro.models import model
+from repro.utils.tree import flatten_with_paths
+
+
+class FakeMesh:
+    """Shape-only stand-in for jax.Mesh (rules only read .shape/.axis_names)."""
+
+    def __init__(self, shape_dict):
+        self.shape = shape_dict
+        self.axis_names = tuple(shape_dict)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _axis_sizes(mesh, part):
+    if part is None:
+        return 1
+    parts = part if isinstance(part, (tuple, list)) else [part]
+    n = 1
+    for p in parts:
+        n *= mesh.shape[p]
+    return n
+
+
+def _validate(spec_tree, abstract_tree, mesh):
+    flat_s = flatten_with_paths(spec_tree)
+    flat_a = flatten_with_paths(abstract_tree)
+    for (path, spec), (_, leaf) in zip(flat_s, flat_a):
+        assert isinstance(spec, P)
+        used = []
+        for part in spec:
+            if part is None:
+                continue
+            parts = part if isinstance(part, (tuple, list)) else [part]
+            used += list(parts)
+        assert len(used) == len(set(used)), (path, spec)
+        assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+        for dim, part in zip(leaf.shape, list(spec) + [None] * leaf.ndim):
+            assert dim % _axis_sizes(mesh, part) == 0, (path, spec,
+                                                        leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [MESH, MESH_MP], ids=["single", "multi"])
+def test_param_specs_valid(arch, mesh):
+    cfg = get_config(arch)
+    abst = model.abstract(cfg)
+    specs = shd.param_specs(cfg, abst, mesh, kind="train")
+    _validate(specs, abst, mesh)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_zero1_opt_specs_valid(arch):
+    cfg = get_config(arch)
+    abst = model.abstract(cfg)
+    ps = shd.param_specs(cfg, abst, MESH, kind="train")
+    zs = shd.zero1_opt_specs(ps, abst, MESH)
+    _validate(zs, abst, MESH)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_valid(arch):
+    cfg = get_config(arch)
+    cache = model.init_cache(cfg, 128, 1024, abstract_only=True)
+    specs = shd.cache_specs(cfg, cache, MESH)
+    _validate(specs, cache, MESH)
+
+
+def test_batch_axes_divisibility():
+    assert shd.batch_axes(MESH, 256) == "data"
+    assert shd.batch_axes(MESH_MP, 256) == ("pod", "data")
+    assert shd.batch_axes(MESH_MP, 1) is None  # long_500k: B=1 replicated
+
+
+def test_fix_spec_drops_nondividing_axes():
+    s = shd.fix_spec(P("model", None), (51_866, 1280), MESH)
+    assert s == P(None, None)
+    s2 = shd.fix_spec(P("model", None), (256_000, 1280), MESH)
+    assert s2 == P("model", None)
+
+
+def test_expert_weights_get_ep_over_data():
+    cfg = get_config("kimi-k2-1t-a32b")
+    abst = model.abstract(cfg)
+    specs = shd.param_specs(cfg, abst, MESH, kind="train")
+    flat = dict(flatten_with_paths(specs))
+    wg = flat["blocks/moe/w_gate"]
+    assert wg[1] == "data" and "model" in wg  # [L, E, d, f]
+
+
+def test_input_specs_cover_all_cells():
+    from repro.configs import all_cells
+    cells = all_cells()
+    assert len(cells) == 32  # 10 archs x 3 + 2 long_500k
+    for arch, shape in cells:
+        cfg = get_config(arch)
+        specs = input_specs(cfg, SHAPES[shape])
+        assert specs, (arch, shape)
+        leaves = jax.tree.leaves(specs)
+        assert all(hasattr(s, "shape") for s in leaves)
+        total = sum(int(np.prod(s.shape)) for s in leaves)
+        assert total > 0

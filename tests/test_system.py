@@ -1,0 +1,148 @@
+"""End-to-end behaviour of the paper's system: mixture-of-experts memory
+prediction driving memory-aware co-location."""
+import numpy as np
+import pytest
+
+from repro.core import (ANNPredictor, MoEPredictor, SimConfig,
+                        make_policies, spark_sim_suite, training_apps)
+from repro.core.metrics import run_scenario
+
+
+@pytest.fixture(scope="module")
+def suite():
+    apps = spark_sim_suite()
+    train = training_apps(apps)
+    moe = MoEPredictor().fit(train)
+    ann = ANNPredictor().fit(train)
+    return apps, moe, ann
+
+
+def test_suite_composition(suite):
+    apps, _, _ = suite
+    assert len(apps) == 44
+    assert len(training_apps(apps)) == 16
+    fams = {a.family for a in apps}
+    assert fams == {"power", "exp_saturation", "log"}
+
+
+def test_expert_selection_accuracy(suite):
+    """Paper Table 5: KNN selector ~97% accurate; clusters are tight."""
+    apps, moe, _ = suite
+    correct = sum(moe.select_family(a.features)[0] == a.family
+                  for a in apps)
+    assert correct / len(apps) >= 0.9
+
+
+def test_memory_prediction_error_under_5pct(suite):
+    """Paper Section 6.9: average prediction error ~5%."""
+    apps, moe, _ = suite
+    rng = np.random.default_rng(0)
+    errs = []
+    for app in apps:
+        fn, _ = moe.predict_function(app, 1000.0, rng)
+        t = app.true_fn(1000.0)
+        errs.append(abs(fn(1000.0) - t) / t)
+    assert float(np.mean(errs)) < 0.05
+
+
+def test_policy_ordering_matches_paper(suite):
+    """Fig. 6: ours > pairwise/online on STP; oracle bounds ours."""
+    apps, moe, ann = suite
+    pols = make_policies(moe, ann)
+    stp = {}
+    for name, pol in pols.items():
+        r = run_scenario(apps, lambda mix, p=pol: p, n_jobs=13, n_mixes=4,
+                         seed=7)
+        stp[name] = r.stp_gmean
+    assert stp["oracle"] >= stp["ours"] * 0.98
+    assert stp["ours"] > stp["pairwise"]
+    assert stp["ours"] > stp["online"]
+    assert stp["ours"] >= stp["quasar"] * 0.99
+    # ours achieves a large fraction of oracle (paper: 83.9%)
+    assert stp["ours"] / stp["oracle"] > 0.7
+
+
+def test_co_location_beats_isolation(suite):
+    """STP > 1 means co-location outperforms one-by-one execution."""
+    apps, moe, _ = suite
+    from repro.core.simulator import OursPolicy
+    r = run_scenario(apps, lambda mix: OursPolicy(moe), n_jobs=7,
+                     n_mixes=4, seed=3)
+    assert r.stp_gmean > 2.0
+    assert r.antt_reduction_mean > 0.0
+
+
+def test_fault_tolerance_jobs_complete(suite):
+    """Host failures re-queue non-checkpointed work; everything finishes."""
+    apps, moe, _ = suite
+    from repro.core.metrics import make_mix
+    from repro.core.simulator import OursPolicy, Simulator
+    rng = np.random.default_rng(1)
+    jobs = make_mix(apps, 9, rng)
+    cfg = SimConfig(failures=True, host_mtbf_s=400.0, repair_time_s=50.0,
+                    straggler_prob=0.1)
+    sim = Simulator(jobs, OursPolicy(moe), cfg, seed=1)
+    out = sim.run()
+    assert all(c < cfg.max_sim_time for c in out["c_cl"])
+    # failures cost time but the schedule still beats serial isolation
+    assert out["stp"] > 1.0
+
+
+def test_simulator_determinism(suite):
+    apps, moe, _ = suite
+    from repro.core.simulator import OursPolicy
+    r1 = run_scenario(apps, lambda m: OursPolicy(moe), n_jobs=6, n_mixes=2,
+                      seed=5)
+    r2 = run_scenario(apps, lambda m: OursPolicy(moe), n_jobs=6, n_mixes=2,
+                      seed=5)
+    assert r1.stp_gmean == r2.stp_gmean
+    assert r1.antt_gmean == r2.antt_gmean
+
+
+def test_memory_never_overclaimed(suite):
+    """Scheduler invariant: booked memory never exceeds capacity."""
+    apps, moe, _ = suite
+    from repro.core.metrics import make_mix
+    from repro.core.simulator import OursPolicy, Simulator
+    rng = np.random.default_rng(2)
+    jobs = make_mix(apps, 11, rng)
+    cfg = SimConfig()
+    sim = Simulator(jobs, OursPolicy(moe), cfg, seed=2)
+    orig = sim._spawn
+
+    def spy(job, host, items, mt, mc, delay=0.0):
+        e = orig(job, host, items, mt, mc, delay)
+        assert host.mem_claimed <= cfg.host_mem_gb + 1e-6
+        return e
+
+    sim._spawn = spy
+    sim.run()
+
+
+def test_stp_bounded_by_job_count(suite):
+    apps, moe, _ = suite
+    from repro.core.simulator import OursPolicy
+    r = run_scenario(apps, lambda m: OursPolicy(moe), n_jobs=6, n_mixes=3,
+                     seed=11)
+    assert r.stp_gmean <= 6.0 + 1e-9
+
+
+def test_knn_confidence_fallback(suite):
+    """An app far from every training cluster triggers the conservative
+    path (paper Section 6.9: distance = soundness guarantee)."""
+    apps, moe, _ = suite
+    alien = np.full(len(apps[0].features), 5.0)  # far outside [0,1]
+    fam, dist, confident = moe.select_family(alien)
+    assert not confident
+
+
+def test_tpu_jobs_universe():
+    """The beyond-paper universe: assigned cells as schedulable jobs with
+    the affine expert the paper's library needs extending with."""
+    from repro.core import tpu_jobs_suite
+    jobs = tpu_jobs_suite()
+    assert len(jobs) == 32  # 10 archs x 3 shapes + 2 long_500k
+    assert all(j.family == "affine" for j in jobs)
+    kimi = [j for j in jobs if j.name.startswith("kimi") and
+            "train" in j.name][0]
+    assert kimi.true_fn(0.0) > 1000  # ~2 TB of weights in GB

@@ -1,0 +1,185 @@
+"""Optimizer / loss / step / compression / data-pipeline tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig, get_config, smoke_shape
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import model
+from repro.train import optim
+from repro.train.compression import (compress_grads_ef, dequantize_int8,
+                                     init_error_buffer, quantize_int8)
+from repro.train.loss import lm_loss
+from repro.train.step import build_train_step
+
+
+def test_adamw_minimizes_quadratic():
+    tc = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=200,
+                     weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = optim.init_opt_state(params, tc)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = optim.adamw_update(params, grads, state, tc)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_cosine_schedule_shape():
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(optim.cosine_schedule(tc, jnp.asarray(s)))
+           for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 1e-3) < 1e-9          # peak after warmup
+    assert lrs[-1] < lrs[1]                   # decays
+    assert lrs[-1] >= 0.1 * 1e-3 - 1e-12      # floor at 10%
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert float(optim.global_norm(clipped)) <= 1.0 + 1e-5
+    assert float(norm) > 1.0
+
+
+def test_train_step_reduces_loss_smoke():
+    cfg = get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    tc = TrainConfig(learning_rate=5e-3, warmup_steps=5, total_steps=120)
+    shape = ShapeConfig("t", "train", 32, 8)
+    dc = DataConfig(kind="lm_synthetic")
+    params = model.init(cfg, jax.random.key(0))
+    opt = optim.init_opt_state(params, tc)
+    step = jax.jit(build_train_step(cfg, tc))
+    losses = []
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in
+                 make_batch(cfg, shape, dc, i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["total_loss"]))
+    assert losses[-1] < losses[0] * 0.75, losses[::6]
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32", remat="none")
+    shape = ShapeConfig("t", "train", 16, 4)
+    dc = DataConfig()
+    batch = {k: jnp.asarray(v) for k, v in
+             make_batch(cfg, shape, dc, 0).items()}
+    params = model.init(cfg, jax.random.key(0))
+    tc_full = TrainConfig(learning_rate=1e-3)
+    tc_micro = TrainConfig(learning_rate=1e-3, microbatch=2)
+    opt = optim.init_opt_state(params, tc_full)
+    p1, _, m1 = build_train_step(cfg, tc_full)(params, opt, batch)
+    p2, _, m2 = build_train_step(cfg, tc_micro)(params, opt, batch)
+    np.testing.assert_allclose(float(m1["total_loss"]),
+                               float(m2["total_loss"]), rtol=1e-5)
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 1e-5
+
+
+def test_vocab_loss_mask():
+    cfg = get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    params = model.init(cfg, jax.random.key(0))
+    tokens = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 8)), jnp.int32)
+    h, _ = model.forward_train(params, cfg, {"tokens": tokens})
+    labels = tokens
+    full, _ = lm_loss(params, cfg, h, labels)
+    masked, _ = lm_loss(params, cfg, h, labels,
+                        jnp.zeros((2, 8)).at[:, :4].set(1.0))
+    half, _ = lm_loss(params, cfg, h[:, :4], labels[:, :4])
+    np.testing.assert_allclose(float(masked), float(half), rtol=1e-6)
+    assert float(full) != float(masked)
+
+
+def test_seq_chunked_loss_equivalence():
+    cfg = get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    params = model.init(cfg, jax.random.key(0))
+    tokens = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 16)), jnp.int32)
+    h, _ = model.forward_train(params, cfg, {"tokens": tokens})
+    l1, _ = lm_loss(params, cfg, h, tokens, seq_chunks=1)
+    l4, _ = lm_loss(params, cfg, h, tokens, seq_chunks=4)
+    np.testing.assert_allclose(float(l1), float(l4), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_int8_quantization_roundtrip_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (128,)), jnp.float32)
+    q, s = quantize_int8(x)
+    err = float(jnp.max(jnp.abs(dequantize_int8(q, s) - x)))
+    assert err <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_unbiased_over_time():
+    """Accumulated EF-compressed gradients converge to the true sum."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(0, 1, (64,)), jnp.float32)
+    grads = {"w": g_true}
+    buf = init_error_buffer(grads)
+    total = jnp.zeros_like(g_true)
+    for _ in range(50):
+        dec, buf = compress_grads_ef(grads, buf)
+        total = total + dec["w"]
+    np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g_true),
+                               atol=1e-2)
+
+
+def test_compressed_training_converges():
+    cfg = get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    tc = TrainConfig(learning_rate=5e-3, warmup_steps=5, total_steps=120,
+                     grad_compression="int8_ef")
+    from repro.train.step import build_train_step_compressed
+    shape = ShapeConfig("t", "train", 32, 8)
+    dc = DataConfig(kind="lm_synthetic")
+    params = model.init(cfg, jax.random.key(0))
+    opt = optim.init_opt_state(params, tc)
+    ebuf = init_error_buffer(params)
+    step = jax.jit(build_train_step_compressed(cfg, tc))
+    losses = []
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in
+                 make_batch(cfg, shape, dc, i).items()}
+        params, opt, ebuf, m = step(params, opt, ebuf, batch)
+        losses.append(float(m["total_loss"]))
+    assert losses[-1] < losses[0] * 0.75
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_determinism_and_sharding():
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    shape = ShapeConfig("t", "train", 16, 8)
+    dc = DataConfig()
+    b1 = make_batch(cfg, shape, dc, step=3)
+    b2 = make_batch(cfg, shape, dc, step=3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    s0 = make_batch(cfg, shape, dc, step=3, shard=0, num_shards=2)
+    s1 = make_batch(cfg, shape, dc, step=3, shard=1, num_shards=2)
+    assert s0["tokens"].shape[0] == 4
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+
+def test_data_modality_batches():
+    shape = ShapeConfig("t", "train", 16, 2)
+    vlm = get_config("pixtral-12b", smoke=True)
+    b = make_batch(vlm, shape, DataConfig(), 0)
+    assert b["patch_embeds"].shape == (2, 4, vlm.d_model)
+    assert b["tokens"].shape == (2, 12)
+    enc = get_config("whisper-large-v3", smoke=True)
+    b = make_batch(enc, shape, DataConfig(), 0)
+    assert b["enc_embeds"].shape == (2, 8, enc.d_model)
+    assert b["tokens"].shape == (2, 8)

@@ -27,6 +27,7 @@ BENCHES = [
     "roofline",            # dry-run roofline table (all cells)
     "kernel_bench",        # kernel wrappers (interpret-mode) + XLA refs
     "tpu_colocation",      # beyond-paper: TPU-jobs universe
+    "open_arrivals",       # beyond-paper: Poisson stream, windowed STP
 ]
 
 

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Fast tier-1 gate with a hard wall-clock timeout, so the red/slow-suite
+# regression (hypothesis import killing collection; >2 min runs) cannot
+# silently come back.
+#
+#   scripts/ci.sh            # fast selection, <= $CI_TIMEOUT_S (default 120)
+#   CI_FULL=1 scripts/ci.sh  # full suite incl. @slow tier-2 (longer cap)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+CI_TIMEOUT_S="${CI_TIMEOUT_S:-120}"
+PYTHON="${PYTHON:-python}"
+
+# Deps: the image bakes in the jax/pallas toolchain; install only what's
+# missing. A dep that is neither installed nor installable fails the
+# gate loudly — tests can't run without it.
+for pkg in pytest numpy jax; do
+    if ! "$PYTHON" -c "import $pkg" >/dev/null 2>&1; then
+        echo "ci: installing missing dep: $pkg"
+        "$PYTHON" -m pip install -q "$pkg" || {
+            echo "ci: FAILED to import or install $pkg" >&2; exit 1; }
+    fi
+done
+
+MARK_ARGS=()
+if [ "${CI_FULL:-0}" = "1" ]; then
+    MARK_ARGS=(-m "")               # include @slow tier-2 tests
+    CI_TIMEOUT_S="${CI_FULL_TIMEOUT_S:-600}"
+fi
+
+echo "ci: running tier-1 (timeout ${CI_TIMEOUT_S}s)"
+rc=0
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    timeout --signal=TERM --kill-after=15 "$CI_TIMEOUT_S" \
+    "$PYTHON" -m pytest -x -q "${MARK_ARGS[@]+"${MARK_ARGS[@]}"}" || rc=$?
+if [ $rc -eq 124 ]; then
+    echo "ci: FAILED — tier-1 exceeded the ${CI_TIMEOUT_S}s budget" >&2
+fi
+exit $rc

@@ -60,7 +60,14 @@ class MemoryFunction:
             base = y / m
             if base <= 0:
                 return 0.0
-            x = float(base ** (1.0 / b)) * (1 - 1e-9)
+            # log-space: base**(1/b) overflows float pow for near-flat
+            # fits (tiny b), e.g. a power calibration of an almost-
+            # constant footprint — saturate to inf (unbounded; callers
+            # cap by chunk/unassigned)
+            with np.errstate(over="ignore"):
+                x = float(np.exp(np.log(base) / b)) * (1 - 1e-9)
+            if not np.isfinite(x):
+                return np.inf
             return x if x >= 1e-12 else 0.0  # below predict()'s x-clamp
         if self.family == "exp_saturation":
             if y >= m:  # saturates below budget -> unbounded

@@ -45,6 +45,10 @@ class MoEPredictor:
     pca: Optional[PCA] = None
     knn: Optional[KNN] = None
     train_labels: Dict[str, str] = field(default_factory=dict)
+    # raw (features, family) rows backing the KNN table — kept so online
+    # partial updates can re-project when the scaler envelope widens
+    _X_raw: Optional[np.ndarray] = None
+    _y_raw: Optional[np.ndarray] = None
 
     def fit(self, train_apps: List[AppProfile], seed: int = 0
             ) -> "MoEPredictor":
@@ -57,12 +61,49 @@ class MoEPredictor:
             X.append(app.features)
             y.append(fn.family)
         X = np.asarray(X, float)
+        self._X_raw = X
+        self._y_raw = np.asarray(y)
         self.scaler = Scaler.fit(X)
         Xs = self.scaler.transform(X)
         self.pca = PCA.fit(Xs, n_components=min(5, Xs.shape[1]))
         self.knn = KNN(k=self.knn_k).fit(self.pca.transform(Xs),
                                          np.asarray(y))
         return self
+
+    def partial_update(self, features: np.ndarray, family: str) -> None:
+        """Online refresh hook (used by repro.sched.online): fold ONE
+        newly profiled program into the selector without a full refit —
+        no re-profiling of training programs, no PCA re-fit.
+
+        The new row is appended to the KNN table; if it falls outside
+        the training envelope, the [0,1] scaler bounds widen and the
+        stored rows are re-projected through the FIXED PCA basis (an
+        O(n*d) matrix multiply)."""
+        if self.knn is None:
+            raise RuntimeError("partial_update() requires a fitted "
+                               "predictor")
+        f = np.asarray(features, float)
+        self._X_raw = np.vstack([self._X_raw, f[None, :]])
+        self._y_raw = np.append(self._y_raw, family)
+        lo = np.minimum(self.scaler.lo, f)
+        hi = np.maximum(self.scaler.hi, f)
+        if np.any(lo < self.scaler.lo) or np.any(hi > self.scaler.hi):
+            # a wider envelope CONTRACTS every scaled coordinate, so KNN
+            # distances shrink against the fixed confidence threshold —
+            # shrink the threshold by the same (geometric-mean) factor
+            # or a second unseen cluster would suddenly look "near" and
+            # lose the paper's distance-based soundness fallback
+            old_span = np.maximum(self.scaler.hi - self.scaler.lo, 1e-12)
+            new_span = np.maximum(hi - lo, 1e-12)
+            self.fallback_distance *= float(
+                np.exp(np.mean(np.log(old_span / new_span))))
+            self.scaler = Scaler(lo=lo, hi=hi)
+            Z = self.pca.transform(self.scaler.transform(self._X_raw))
+            self.knn = KNN(k=self.knn_k).fit(Z, self._y_raw)
+        else:
+            z = self.pca.transform(self.scaler.transform(f[None, :]))
+            self.knn.X = np.vstack([self.knn.X, z])
+            self.knn.y = np.append(self.knn.y, family)
 
     # --- runtime ---------------------------------------------------------
     def select_family(self, features: np.ndarray

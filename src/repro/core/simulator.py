@@ -1,12 +1,18 @@
 """Event-driven cluster simulator for memory-aware task co-location.
 
-Reproduces the paper's evaluation mechanics: jobs arrive at t=0 (FCFS),
-profile while waiting (feature probe + 5%/10% calibration runs, whose
-processed items CREDIT the job — no wasted cycles), then a dispatcher
-spawns executors on hosts with spare memory and CPU headroom. Memory
-mis-prediction has real consequences: moderate over-subscription causes
-paging (host-wide slowdown), large overflow OOM-kills the executor and
-its items are re-queued (paper Section 2.3).
+Reproduces the paper's evaluation mechanics: jobs arrive (batch at t=0
+FCFS, or as an open arrival stream via ``arrivals=``), profile while
+waiting (feature probe + 5%/10% calibration runs, whose processed items
+CREDIT the job — no wasted cycles), then a dispatcher spawns executors
+on hosts with spare memory and CPU headroom. Memory mis-prediction has
+real consequences: moderate over-subscription causes paging (host-wide
+slowdown), large overflow OOM-kills the executor and its items are
+re-queued (paper Section 2.3).
+
+Admission sizing (predict -> calibrate -> budget-inverse) is owned by
+``repro.sched.admission.AdmissionController`` — the same controller the
+serving driver uses — policies only decide placement order and the
+budget each host offers.
 
 Policies: OURS (mixture-of-experts), QUASAR-like (single ANN estimator),
 PAIRWISE (<=2 per host, claims all free memory), ONLINE-SEARCH (probing
@@ -23,12 +29,17 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.experts import MemoryFunction
 from repro.core.workloads import AppProfile
+
+if TYPE_CHECKING:  # runtime import is lazy: repro.sched imports
+    # repro.core (experts/workloads), so importing it back at module
+    # scope would be circular when repro.sched loads first
+    from repro.sched.admission import AdmissionController
 
 
 @dataclass
@@ -74,6 +85,7 @@ class Job:
     info: Dict = field(default_factory=dict)
     unassigned: float = 0.0
     done: float = 0.0
+    arrival: float = 0.0              # open-arrival time (0 for batch)
     profiled_at: float = 0.0
     finish: Optional[float] = None
     conservative: bool = False
@@ -121,16 +133,28 @@ class Host:
 
 
 class Simulator:
-    def __init__(self, jobs_spec: List[Tuple[AppProfile, float]],
-                 policy: "Policy", cfg: SimConfig, seed: int = 0):
+    def __init__(self, jobs_spec: Optional[List[Tuple[AppProfile, float]]],
+                 policy: "Policy", cfg: SimConfig, seed: int = 0,
+                 arrivals: Optional[List] = None):
+        """``jobs_spec`` is the closed batch (everything at t=0);
+        ``arrivals`` (a list of ``repro.sched.arrivals.Arrival``) instead
+        feeds the cluster as an open queueing system — turnaround is then
+        measured from each job's arrival time."""
         self.cfg = cfg
         self.rng = np.random.default_rng(seed)
         self.policy = policy
         self.hosts = [Host(h, cfg.host_mem_gb) for h in range(cfg.n_hosts)]
         self.jobs: List[Job] = []
-        for jid, (app, items) in enumerate(jobs_spec):
-            c_iso = items / (cfg.n_hosts * app.rate)
-            self.jobs.append(Job(jid, app, items, c_iso, unassigned=items))
+        if arrivals is not None:
+            for jid, a in enumerate(sorted(arrivals, key=lambda a: a.t)):
+                c_iso = a.items / (cfg.n_hosts * a.app.rate)
+                self.jobs.append(Job(jid, a.app, a.items, c_iso,
+                                     unassigned=a.items, arrival=a.t))
+        else:
+            for jid, (app, items) in enumerate(jobs_spec):
+                c_iso = items / (cfg.n_hosts * app.rate)
+                self.jobs.append(Job(jid, app, items, c_iso,
+                                     unassigned=items))
         self.events: list = []
         self._seq = itertools.count()
         self.t = 0.0
@@ -214,19 +238,12 @@ class Simulator:
     def run(self) -> Dict:
         cfg = self.cfg
         for job in self.jobs:
-            if self.policy.uses_profiling:
-                frac = self.rng.uniform(cfg.profile_frac_lo,
-                                        cfg.profile_frac_hi)
-                t_prof = frac * job.c_iso
-                if cfg.profile_single_host:
-                    credit = min(t_prof * job.app.rate, 0.15 * job.items)
-                else:
-                    credit = 0.15 * job.items
-                job.done += credit
-                job.unassigned -= credit
-                self._push(t_prof, "profiled", job)
-            else:
-                self._push(0.0, "profiled", job)
+            # profile fraction drawn HERE (not at pop time) so the RNG
+            # stream is identical between batch and open-arrival runs
+            frac = self.rng.uniform(cfg.profile_frac_lo,
+                                    cfg.profile_frac_hi) \
+                if self.policy.uses_profiling else None
+            self._push(job.arrival, "arrive", (job, frac))
         if cfg.failures and cfg.host_mtbf_s > 0:
             for h in self.hosts:
                 self._push(self.rng.exponential(cfg.host_mtbf_s),
@@ -237,7 +254,23 @@ class Simulator:
             if t > cfg.max_sim_time:
                 break
             self.t = t
-            if kind == "profiled":
+            if kind == "arrive":
+                job, frac = payload
+                if frac is not None:
+                    # profiling runs while the job waits; its processed
+                    # items credit the job (paper: no cycle is wasted)
+                    t_prof = frac * job.c_iso
+                    if cfg.profile_single_host:
+                        credit = min(t_prof * job.app.rate,
+                                     0.15 * job.items)
+                    else:
+                        credit = 0.15 * job.items
+                    job.done += credit
+                    job.unassigned -= credit
+                    self._push(t + t_prof, "profiled", job)
+                else:
+                    self._push(t, "profiled", job)
+            elif kind == "profiled":
                 payload.profiled_at = t
                 payload.fn_hat, payload.info = self.policy.predict(
                     payload, self.rng)
@@ -286,8 +319,22 @@ class Simulator:
         for job in self.jobs:
             self._maybe_finish(job, self.t)
 
-        c_cl = np.asarray([j.finish if j.finish is not None
-                           else cfg.max_sim_time for j in self.jobs])
+        if not self.jobs:
+            return {"stp": 0.0, "antt": 0.0, "antt_reduction": 0.0,
+                    "makespan": 0.0, "c_cl": [], "c_is": [],
+                    "arrivals": [], "finish_times": [], "unfinished": 0,
+                    "oom_count": self.oom_count,
+                    "util_trace": self.util_trace}
+        # turnaround is measured from each job's arrival (0 for batch);
+        # unfinished jobs are CENSORED at the simulation cap, arrival-
+        # relative and floored at c_iso. That is a LOWER bound on the
+        # true turnaround, so STP/ANTT are optimistic bounds whenever
+        # ``unfinished`` > 0 — compare policies on drained runs, or
+        # check ``unfinished`` before trusting the aggregate.
+        unfinished = sum(1 for j in self.jobs if j.finish is None)
+        c_cl = np.asarray([j.finish - j.arrival if j.finish is not None
+                           else max(cfg.max_sim_time - j.arrival, j.c_iso)
+                           for j in self.jobs])
         c_is = np.asarray([j.c_iso for j in self.jobs])
         stp = float(np.sum(c_is / c_cl))
         antt = float(np.mean(c_cl / c_is))
@@ -300,6 +347,9 @@ class Simulator:
                 "antt_reduction": antt_reduction,
                 "makespan": float(np.max(c_cl)),
                 "c_cl": c_cl.tolist(), "c_is": c_is.tolist(),
+                "arrivals": [j.arrival for j in self.jobs],
+                "finish_times": [j.finish for j in self.jobs],
+                "unfinished": unfinished,
                 "oom_count": self.oom_count,
                 "util_trace": self.util_trace}
 
@@ -309,27 +359,37 @@ class Simulator:
 # ---------------------------------------------------------------------------
 
 class Policy:
-    """Base: predictor-driven best-fit co-location (the paper's runtime)."""
+    """Base: predictor-driven best-fit co-location (the paper's runtime).
+
+    Budget-inverse sizing and budget shading are delegated to the shared
+    :class:`repro.sched.admission.AdmissionController` (the same object
+    the serving driver admits request batches through)."""
     name = "base"
     uses_profiling = True
 
-    def __init__(self, predictor):
+    def __init__(self, predictor,
+                 admission: Optional["AdmissionController"] = None):
+        if admission is None:
+            from repro.sched.admission import AdmissionController
+            admission = AdmissionController()
         self.predictor = predictor
+        self.admission = admission
 
     def predict(self, job: Job, rng) -> Tuple[MemoryFunction, Dict]:
         return self.predictor.predict_function(job.app, job.items, rng)
 
-    def spawn_params(self, sim, job, host, budget) -> Optional[Tuple]:
-        """-> (items, mem_true, mem_claimed, delay) or None.
-
-        Items per executor = min(memory budget via the predicted function's
-        inverse, the Spark partition chunk D/H). The chunk cap preserves
-        job-level parallelism (an executor that cached the whole input
-        would serialize the job); the memory cap is the paper's mechanism.
-        On an EMPTY host at least a chunk is taken even if it won't fully
-        fit in cache (spill == paging penalty)."""
+    def _sized_items(self, sim, job, host, budget) -> Optional[float]:
+        """Budget-inverse executor sizing, shared by every predictor-
+        driven policy: items = min(memory budget via the predicted
+        function's inverse, the Spark partition chunk D/H). The chunk
+        cap preserves job-level parallelism (an executor that cached the
+        whole input would serialize the job); the memory cap is the
+        paper's mechanism. On an EMPTY host at least a chunk is taken
+        even if it won't fully fit in cache (spill == paging penalty)."""
         chunk = job.items / (sim.cfg.n_hosts * sim.cfg.tasks_per_slot)
-        n = min(job.unassigned, job.fn_hat.inverse(budget), chunk)
+        n = self.admission.admit(job.fn_hat, budget,
+                                 cap=min(job.unassigned, chunk),
+                                 book=False).units
         if not host.execs:
             n = min(job.unassigned, max(n, chunk))
         # an executor below a quarter chunk isn't worth co-locating (and
@@ -337,8 +397,15 @@ class Policy:
         # of a nearly-done job is always placeable
         if n < min(chunk * 0.25, job.unassigned) - 1e-12 or n <= 1e-9:
             return None
+        return n
+
+    def spawn_params(self, sim, job, host, budget) -> Optional[Tuple]:
+        """-> (items, mem_true, mem_claimed, delay) or None."""
+        n = self._sized_items(sim, job, host, budget)
+        if n is None:
+            return None
         mem_true = job.app.measure(n)
-        mem_claimed = min(float(job.fn_hat(n)), budget)
+        mem_claimed = self.admission.book(job.fn_hat, n, budget)
         return n, mem_true, mem_claimed, 0.0
 
     def dispatch(self, sim: Simulator, hosts=None):
@@ -362,10 +429,10 @@ class Policy:
                 if free < cfg.min_alloc_gb or \
                         cpu_free < job.app.cpu_load:
                     continue
-                budget = free * (1.0 - cfg.safety_margin)
-                if getattr(job, "conservative", False):
-                    budget *= 0.5
-                budget *= 0.5 ** min(job.oom_count, 3)
+                budget = self.admission.effective_budget(
+                    free, safety_margin=cfg.safety_margin,
+                    conservative=getattr(job, "conservative", False),
+                    oom_count=job.oom_count)
                 params = self.spawn_params(sim, job, host, budget)
                 if params is None:
                     continue
@@ -376,10 +443,24 @@ class Policy:
 class OursPolicy(Policy):
     name = "ours"
 
+    def __init__(self, predictor,
+                 admission: Optional["AdmissionController"] = None,
+                 refresher=None):
+        """``refresher`` (repro.sched.online.OnlineRefresher) folds each
+        profiled arrival's calibration curve back into the predictor —
+        the open-arrival online-learning loop."""
+        super().__init__(predictor, admission)
+        self.refresher = refresher
+
     def predict(self, job, rng):
         fn, info = self.predictor.predict_function(job.app, job.items, rng)
         if not info.get("confident", True):
             job.conservative = True
+        if self.refresher is not None and info.get("calib"):
+            xs, ys = zip(*info["calib"])
+            info["refreshed"] = self.refresher.observe(
+                job.app.features, xs, ys,
+                confident=info.get("confident"))
         return fn, info
 
 
@@ -409,18 +490,15 @@ class OnlineSearchPolicy(Policy):
         return job.app.true_fn, {"family": job.app.family}
 
     def spawn_params(self, sim, job, host, budget):
-        chunk = job.items / (sim.cfg.n_hosts * sim.cfg.tasks_per_slot)
-        n_opt = min(job.unassigned, job.fn_hat.inverse(budget), chunk)
-        if not host.execs:
-            n_opt = min(job.unassigned, max(n_opt, chunk))
-        if n_opt < min(chunk * 0.25, job.unassigned) - 1e-12 \
-                or n_opt <= 1e-9:
+        n_opt = self._sized_items(sim, job, host, budget)
+        if n_opt is None:
             return None
         qual = sim.rng.uniform(sim.cfg.online_alloc_lo, 1.0)
         n = n_opt * qual
         mem_true = job.app.measure(n)
         delay = sim.cfg.online_search_eta * n / max(job.app.rate, 1e-12)
-        return n, mem_true, min(float(job.fn_hat(n)), budget), delay
+        return n, mem_true, self.admission.book(job.fn_hat, n, budget), \
+            delay
 
 
 class PairwisePolicy(Policy):

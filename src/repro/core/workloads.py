@@ -56,6 +56,15 @@ _SB = [("Hive", "exp_saturation"), ("SVD++", "log"), ("MatrixFact", "log"),
 TRAIN_SUITES = ("HB", "BDB")
 INPUT_SIZES_M_ITEMS = {"small": 0.3, "medium": 30.0, "large": 1000.0}
 
+
+def size_class_of(items: float) -> str:
+    """Nearest paper Table-4 size class for an input size (used for
+    per-class reporting of open-arrival streams)."""
+    classes = list(INPUT_SIZES_M_ITEMS)
+    logs = np.log(np.asarray(list(INPUT_SIZES_M_ITEMS.values())))
+    return classes[int(np.argmin(np.abs(
+        logs - np.log(max(float(items), 1e-12)))))]
+
 # family -> 22-dim cluster center in [0,1] feature space (three tight
 # clusters; paper Fig.16 / Section 6.9: within-cluster corr > 0.9999)
 _CENTER_SEED = 7

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.utils.compat import shard_map
+
 
 def pipeline_apply(stage_fn: Callable, mesh, axis: str,
                    stage_params, x_micro: jnp.ndarray) -> jnp.ndarray:
@@ -70,7 +72,7 @@ def pipeline_apply(stage_fn: Callable, mesh, axis: str,
         out = jnp.where(rank == n_stages - 1, out, jnp.zeros_like(out))
         return jax.lax.psum(out, axis)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),

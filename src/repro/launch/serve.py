@@ -1,6 +1,11 @@
 """Production serving driver: prefill + decode loop with the paper's
 memory-budgeted admission (the serving-side co-location hook).
 
+Admission routes through ``repro.sched.AdmissionController`` — the SAME
+predict -> two-point-calibrate -> budget-inverse controller the cluster
+simulator's policies use, with requests as the work unit and HBM as the
+host budget.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 8 --decode-steps 16
 """
@@ -14,21 +19,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import experts
 from repro.models import model as model_lib
+from repro.sched import AdmissionController
 from repro.train.step import build_decode_step, build_prefill_step
 from repro.utils.tree import tree_bytes
 
 
-def admission_batch(cfg, max_len: int, budget_gb: float) -> int:
+def admission_batch(cfg, max_len: int, budget_gb: float,
+                    controller: AdmissionController = None) -> int:
     """Paper-style: calibrate footprint(batch) at two small batches, admit
     via the inverse under the HBM budget."""
+    controller = controller or AdmissionController()
+
     def fp(b):
         w = tree_bytes(model_lib.abstract(cfg))
         c = model_lib.init_cache(cfg, b, max_len, abstract_only=True)
         return (w + tree_bytes(c)) / 2 ** 30
-    fn = experts.calibrate_two_point("affine", 2, fp(2), 4, fp(4))
-    return max(int(fn.inverse(budget_gb)), 1)
+    fn = controller.calibrate("affine", [(2, fp(2)), (4, fp(4))])
+    return controller.admit_batch(fn, budget_gb, min_batch=1)
 
 
 def main():

@@ -1,0 +1,28 @@
+"""Online scheduling subsystem: the paper's runtime, factored out.
+
+Three parts, shared by the cluster simulator (``core/simulator.py``) and
+the serving driver (``launch/serve.py``):
+
+* ``admission``  — :class:`AdmissionController`: predict -> two-point
+  calibrate -> budget-inverse admission (how many units fit under a
+  memory budget), plus the scheduler's budget-shading rules
+  (safety margin, conservative fallback, OOM backoff).
+* ``arrivals``   — open-arrival workload generation: Poisson or
+  trace-driven arrival streams with per-class input-size mixes over an
+  application universe, so the system runs as a continuously-fed queue
+  rather than a batch at t=0.
+* ``online``     — :class:`OnlineRefresher`: folds newly profiled
+  arrivals back into a fitted :class:`~repro.core.predictor.MoEPredictor`
+  (KNN append + scaler-bound widening) without a full refit.
+"""
+from repro.sched.admission import (  # noqa: F401
+    AdmissionController,
+    AdmissionDecision,
+)
+from repro.sched.arrivals import (  # noqa: F401
+    Arrival,
+    ArrivalConfig,
+    poisson_arrivals,
+    trace_arrivals,
+)
+from repro.sched.online import OnlineRefresher  # noqa: F401

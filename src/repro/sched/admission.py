@@ -1,0 +1,139 @@
+"""Memory-budgeted admission control (paper Sections 4.1/4.2).
+
+The paper's runtime decides, per host, how much work to admit from a
+predicted memory function: select an expert family, calibrate it on two
+small probes, then invert it under the free-memory budget. The cluster
+simulator's policies and the serving driver both consumed private copies
+of this logic; :class:`AdmissionController` is the single shared owner.
+
+Units are deliberately abstract ("units" = M-items for Spark jobs,
+concurrent requests for the serving batch) — the controller only cares
+that ``fn(units) -> GB`` is monotone.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import experts
+from repro.core.experts import MemoryFunction
+
+
+@dataclass(frozen=True)
+class AdmissionDecision:
+    """Outcome of a budget-inverse admission query."""
+    units: float          # admitted work units (0 if nothing fits)
+    mem_gb: float         # memory booked for those units (<= budget_gb)
+    budget_gb: float      # the shaded budget the inverse ran against
+    fn: MemoryFunction    # the calibrated function used
+    info: Dict = field(default_factory=dict)
+
+    def __bool__(self) -> bool:
+        return self.units > 0.0
+
+
+class AdmissionController:
+    """Owns predict -> two-point-calibrate -> budget-inverse admission.
+
+    Stateless with respect to any particular host or request stream;
+    scheduler policies keep one instance and feed it per-decision budgets.
+    """
+
+    def __init__(self, safety_margin: float = 0.0,
+                 conservative_factor: float = 0.5,
+                 oom_backoff: float = 0.5, max_oom_shifts: int = 3):
+        self.safety_margin = float(safety_margin)
+        self.conservative_factor = float(conservative_factor)
+        self.oom_backoff = float(oom_backoff)
+        self.max_oom_shifts = int(max_oom_shifts)
+
+    # --- calibration -----------------------------------------------------
+    def calibrate(self, family: str,
+                  probes: Sequence[Tuple[float, float]]) -> MemoryFunction:
+        """Instantiate (m, b) from measured (x, y) probes.
+
+        Two probes use the paper's exact two-point solve; more probes fall
+        back to the least-squares fit (same families, same guards)."""
+        probes = sorted((float(x), float(y)) for x, y in probes)
+        if len(probes) < 2:
+            raise ValueError("calibration needs at least two probes")
+        if len(probes) == 2:
+            (x1, y1), (x2, y2) = probes
+            return experts.calibrate_two_point(family, x1, y1, x2, y2)
+        xs, ys = zip(*probes)
+        return experts.fit(family, xs, ys)
+
+    # --- budget shading --------------------------------------------------
+    def effective_budget(self, free_gb: float, *,
+                         safety_margin: Optional[float] = None,
+                         conservative: bool = False,
+                         oom_count: int = 0) -> float:
+        """Shade raw free memory by the scheduler's risk rules: global
+        safety margin, the low-confidence conservative fallback (paper
+        Section 6.9), and exponential backoff after OOM kills (paper
+        Section 2.3)."""
+        margin = self.safety_margin if safety_margin is None \
+            else float(safety_margin)
+        budget = float(free_gb) * (1.0 - margin)
+        if conservative:
+            budget *= self.conservative_factor
+        budget *= self.oom_backoff ** min(int(oom_count),
+                                          self.max_oom_shifts)
+        return budget
+
+    # --- budget-inverse admission ---------------------------------------
+    def admit(self, fn: MemoryFunction, budget_gb: float, *,
+              cap: float = np.inf, floor: float = 0.0,
+              book: bool = True,
+              info: Optional[Dict] = None) -> AdmissionDecision:
+        """Largest ``units <= cap`` with ``fn(units) <= budget_gb``;
+        zero-unit decision when that falls below ``floor``. An infinite
+        result (curve saturates below the budget AND no cap) books the
+        whole budget — the caller must bound the work some other way.
+
+        ``book=False`` skips the booked-memory evaluation (``mem_gb``
+        reads 0.0) for callers that only size — e.g. the simulator's
+        per-(job, host) candidate scan, which books separately after
+        adjusting the unit count."""
+        budget_gb = float(budget_gb)
+        units = float(min(fn.inverse(budget_gb), cap))
+        if units <= 0.0 or units < floor - 1e-12:
+            return AdmissionDecision(0.0, 0.0, budget_gb, fn,
+                                     dict(info or {}))
+        if not book:
+            mem = 0.0
+        elif np.isfinite(units):
+            mem = self.book(fn, units, budget_gb)
+        else:
+            mem = budget_gb
+        return AdmissionDecision(units, mem, budget_gb, fn,
+                                 dict(info or {}))
+
+    def book(self, fn: MemoryFunction, units: float,
+             budget_gb: float) -> float:
+        """Memory to reserve for ``units``: the predicted footprint,
+        never more than the budget that admitted it."""
+        return min(float(fn(units)), float(budget_gb))
+
+    def admit_batch(self, fn: MemoryFunction, budget_gb: float, *,
+                    min_batch: int = 1,
+                    max_batch: Optional[int] = None) -> int:
+        """Integer variant for request serving: whole requests only,
+        always at least ``min_batch`` (a server must make progress even
+        when the model barely fits).
+
+        An UNBOUNDED admission (the curve saturates below the budget)
+        requires an explicit ``max_batch`` — silently returning a huge
+        batch would be a foot-gun for any non-affine footprint."""
+        cap = np.inf if max_batch is None else float(max_batch)
+        dec = self.admit(fn, budget_gb, cap=cap)
+        if not np.isfinite(dec.units):
+            raise ValueError(
+                f"unbounded admission: {fn.family} footprint saturates "
+                f"below the {budget_gb} GB budget — pass max_batch")
+        n = int(dec.units)
+        if max_batch is not None:
+            n = min(n, int(max_batch))
+        return max(n, int(min_batch))

@@ -1,0 +1,101 @@
+"""Open-arrival workload generation.
+
+The paper evaluates a closed batch (all jobs present at t=0); a runtime
+system faces a continuous stream. This module turns an application
+universe (``repro.core.workloads``) into timed arrival streams:
+
+* :func:`poisson_arrivals` — memoryless arrivals at a configurable rate
+  with a per-class input-size mix (small/medium/large, paper Table 4)
+  and optional per-app weighting.
+* :func:`trace_arrivals`   — replay an explicit ``(t, app, size)`` trace
+  (e.g. recorded from production) against the universe.
+
+Streams are plain sorted lists of :class:`Arrival`; the simulator turns
+each into a job whose turnaround is measured from its arrival time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.workloads import INPUT_SIZES_M_ITEMS, AppProfile
+
+# default per-class mix: production streams skew small (many interactive
+# queries) with a heavy tail of large analytics jobs
+DEFAULT_SIZE_WEIGHTS: Dict[str, float] = {
+    "small": 0.5, "medium": 0.35, "large": 0.15,
+}
+
+
+@dataclass(frozen=True)
+class Arrival:
+    t: float              # arrival time (s)
+    app: AppProfile
+    items: float          # input size in M-items
+
+
+@dataclass
+class ArrivalConfig:
+    rate_per_s: float = 0.02          # Poisson arrival rate (jobs/s)
+    n_jobs: int = 20                  # stream length
+    horizon_s: Optional[float] = None  # truncate the stream at this time
+    size_weights: Dict[str, float] = field(
+        default_factory=lambda: dict(DEFAULT_SIZE_WEIGHTS))
+    app_weights: Optional[Sequence[float]] = None  # per-app mix (uniform)
+
+
+def sample_input_size(rng: np.random.Generator,
+                      size_weights: Optional[Dict[str, float]] = None
+                      ) -> float:
+    """Draw an input size (M-items) from the class mix over the paper's
+    small/medium/large sizes (Table 4)."""
+    weights = size_weights or DEFAULT_SIZE_WEIGHTS
+    classes = [c for c in INPUT_SIZES_M_ITEMS if weights.get(c, 0.0) > 0]
+    p = np.asarray([weights[c] for c in classes], float)
+    p /= p.sum()
+    cls = classes[int(rng.choice(len(classes), p=p))]
+    return float(INPUT_SIZES_M_ITEMS[cls])
+
+
+def poisson_arrivals(apps: Sequence[AppProfile], acfg: ArrivalConfig,
+                     seed: Union[int, Sequence[int]] = 0) -> List[Arrival]:
+    """Open Poisson stream: exponential inter-arrival gaps at
+    ``rate_per_s``, app drawn from ``app_weights`` (uniform by default),
+    size from the per-class mix. ``seed`` takes anything
+    ``np.random.default_rng`` accepts (ints or int sequences)."""
+    if acfg.rate_per_s <= 0:
+        raise ValueError("rate_per_s must be positive")
+    rng = np.random.default_rng(seed)
+    p = None
+    if acfg.app_weights is not None:
+        p = np.asarray(acfg.app_weights, float)
+        if len(p) != len(apps):
+            raise ValueError("app_weights length != number of apps")
+        p = p / p.sum()
+    out: List[Arrival] = []
+    t = 0.0
+    for _ in range(acfg.n_jobs):
+        t += float(rng.exponential(1.0 / acfg.rate_per_s))
+        if acfg.horizon_s is not None and t > acfg.horizon_s:
+            break
+        app = apps[int(rng.choice(len(apps), p=p))]
+        out.append(Arrival(t, app, sample_input_size(rng,
+                                                     acfg.size_weights)))
+    return out
+
+
+def trace_arrivals(trace: Sequence[Tuple[float, str, Union[str, float]]],
+                   apps: Sequence[AppProfile]) -> List[Arrival]:
+    """Replay ``(t, app_name, size)`` rows; ``size`` is either a class
+    name from the paper's Table 4 or an explicit M-items value."""
+    by_name = {a.name: a for a in apps}
+    out: List[Arrival] = []
+    for t, name, size in trace:
+        if name not in by_name:
+            raise KeyError(f"unknown application {name!r}")
+        items = INPUT_SIZES_M_ITEMS[size] if isinstance(size, str) \
+            else float(size)
+        out.append(Arrival(float(t), by_name[name], float(items)))
+    return sorted(out, key=lambda a: a.t)

@@ -1,0 +1,18 @@
+"""Version-tolerant wrappers over moving JAX APIs."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across JAX versions.
+
+    Newer JAX exposes ``jax.shard_map(..., check_vma=...)``; 0.4.x only
+    has ``jax.experimental.shard_map.shard_map(..., check_rep=...)``
+    (same flag, earlier name)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

@@ -59,6 +59,7 @@ def test_async_checkpointer(tmp_path):
                                   np.asarray(restored["a"]))
 
 
+@pytest.mark.slow
 def test_restore_resume_matches_uninterrupted_training(tmp_path):
     """Fault tolerance: save mid-run, restore, continue — identical to an
     uninterrupted run (optimizer state + data determinism)."""

@@ -22,6 +22,7 @@ def _run(code: str, timeout=420) -> dict:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
 def test_sharded_train_step_runs_and_matches_single_device():
     res = _run("""
         import json
@@ -176,6 +177,7 @@ def test_seq_parallel_decode_attention_psum():
     assert res["err"] < 1e-5
 
 
+@pytest.mark.slow
 def test_shard_map_ep_moe_matches_dense_path():
     """The optimized expert-parallel MoE (EXPERIMENTS.md P1/P2) is
     numerically exact vs the dense GSPMD path, incl. gradients, in both
@@ -215,6 +217,7 @@ def test_shard_map_ep_moe_matches_dense_path():
         assert v < 1e-3, (k, v)
 
 
+@pytest.mark.slow
 def test_pipeline_parallelism_matches_sequential():
     """GPipe-style microbatch pipeline over the 'pipe' (pod) axis equals
     sequential stage application (launch/pipeline.py)."""

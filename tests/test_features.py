@@ -15,6 +15,7 @@ def test_feature_vector_shape_and_finiteness():
     assert len(TPU_FEATURE_NAMES) == 22
 
 
+@pytest.mark.slow
 def test_features_separate_architecture_families():
     """Attention-free vs dense archs produce distinct feature vectors —
     the property the KNN expert selector relies on."""

@@ -78,6 +78,28 @@ def test_decode_attention_sweep(B, S, Hq, Hkv, D, ln, dtype):
         atol=_tol(dtype), rtol=_tol(dtype))
 
 
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,ln", [
+    (1, 50, 3, 1, 16, 7),     # odd S, odd Hq (padding + GQA remainder)
+    (2, 33, 5, 1, 32, 30),    # S far from the 32-wide block grid
+    (1, 96, 6, 3, 48, 11),    # non-pow2 head dim, odd KV head count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_odd_shapes(B, S, Hq, Hkv, D, ln, dtype):
+    """Non-power-of-two sweeps vs the jnp oracle in both dtypes."""
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, Hq, D)), dtype)
+    kc = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), dtype)
+    vc = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), dtype)
+    out = decode_attention(q, kc, vc, ln, blk_k=32)
+    ref = jnp.moveaxis(decode_attention_ref(
+        jnp.moveaxis(q, 2, 1), kc, vc, jnp.full((B,), ln + 1, jnp.int32),
+        scale=D ** -0.5), 1, 2)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
 def test_decode_attention_matches_model_path():
     """Kernel agrees with the model's own decode_attention (XLA path)."""
     from repro.kernels.decode_attention.ops import decode_attention as kd
@@ -110,6 +132,29 @@ def test_ssd_scan_sweep(B, S, H, P, G, N, chunk):
     yr, sr = ssd_scan_ref(xb, a, Bm, Cm, chunk=chunk)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
     np.testing.assert_allclose(np.asarray(st), np.asarray(sr), atol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+    (1, 37, 3, 8, 1, 8, 16),    # odd S (ragged last chunk), odd H
+    (2, 50, 2, 24, 2, 12, 16),  # non-pow2 P and N
+    (1, 21, 5, 8, 5, 8, 8),     # S barely above 2 chunks, G == H
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_odd_shapes(B, S, H, P, G, N, chunk, dtype):
+    """Non-power-of-two sweeps vs the jnp oracle in both dtypes."""
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    xb = jnp.asarray(rng.normal(0, 0.5, (B, S, H, P)), dtype)
+    a = jnp.asarray(-np.abs(rng.normal(0, 0.3, (B, S, H))), dtype)
+    Bm = jnp.asarray(rng.normal(0, 0.5, (B, S, G, N)), dtype)
+    Cm = jnp.asarray(rng.normal(0, 0.5, (B, S, G, N)), dtype)
+    y, st = ssd_scan(xb, a, Bm, Cm, chunk=chunk)
+    yr, sr = ssd_scan_ref(xb, a, Bm, Cm, chunk=chunk)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), atol=tol)
+    np.testing.assert_allclose(
+        np.asarray(st, np.float32), np.asarray(sr, np.float32), atol=tol)
 
 
 def test_ssd_scan_initial_state():

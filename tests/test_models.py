@@ -45,6 +45,7 @@ def test_smoke_prefill_decode(arch):
 
 @pytest.mark.parametrize("arch", ["qwen3-14b", "gemma2-27b", "mamba2-780m",
                                   "zamba2-2.7b", "whisper-large-v3"])
+@pytest.mark.slow
 def test_decode_matches_forward(arch):
     """prefill(t[:k]) + decode(t[k:]) logits == full forward logits."""
     cfg = get_config(arch, smoke=True).replace(
@@ -69,6 +70,7 @@ def test_decode_matches_forward(arch):
     assert max(errs) < 2e-3, errs
 
 
+@pytest.mark.slow
 def test_moe_decode_matches_forward_with_nodrop_capacity():
     """MoE consistency requires drop-free capacity (documented semantics:
     capacity drops depend on the token population)."""

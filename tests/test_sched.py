@@ -1,0 +1,403 @@
+"""Invariants of the online scheduling subsystem (repro/sched/):
+admission never over-books the budget, arrival streams conserve work
+across OOM kills and requeues, and open-arrival runs are deterministic.
+Mirrors tests/test_system.py style (module-scope fitted suite)."""
+import numpy as np
+import pytest
+
+from repro.core import (MoEPredictor, SimConfig, Simulator,
+                        spark_sim_suite, training_apps)
+from repro.core.experts import MemoryFunction, calibrate_two_point
+from repro.core.metrics import (run_open_scenario, run_scenario,
+                                windowed_metrics)
+from repro.core.simulator import OursPolicy, PairwisePolicy, Policy
+from repro.core.workloads import (FEATURE_NAMES, INPUT_SIZES_M_ITEMS,
+                                  AppProfile, size_class_of)
+from repro.sched import (AdmissionController, Arrival, ArrivalConfig,
+                         OnlineRefresher, poisson_arrivals,
+                         trace_arrivals)
+from repro.sched.arrivals import sample_input_size
+
+
+@pytest.fixture(scope="module")
+def suite():
+    apps = spark_sim_suite()
+    moe = MoEPredictor().fit(training_apps(apps))
+    return apps, moe
+
+
+def _novel_app(seed=0, shift=2.0, cluster_seed=42):
+    """An app from a feature cluster the predictor never saw, with an
+    affine (weight-dominated) memory curve. Apps created with the same
+    ``cluster_seed`` share a tight cluster (like a workload class)."""
+    center = np.random.default_rng(cluster_seed).uniform(
+        0.15, 0.85, len(FEATURE_NAMES)) + shift
+    rng = np.random.default_rng(seed)
+    feat = center + rng.normal(0, 0.015, len(FEATURE_NAMES))
+    return AppProfile(name=f"NV.app{seed}", suite="NV", family="affine",
+                      true_fn=MemoryFunction("affine", 6.0, 0.03),
+                      cpu_load=0.3, rate=0.05, features=feat)
+
+
+# --- AdmissionController ---------------------------------------------------
+
+def test_admission_never_exceeds_budget():
+    """Core invariant: booked memory <= budget for every family over a
+    seeded sweep of curves and budgets."""
+    ctrl = AdmissionController()
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        fam = ["power", "exp_saturation", "log", "affine"][
+            rng.integers(4)]
+        fn = MemoryFunction(fam, float(rng.uniform(2.0, 60.0)),
+                            float(rng.uniform(0.02, 0.8)))
+        budget = float(rng.uniform(1.0, 64.0))
+        dec = ctrl.admit(fn, budget, cap=float(rng.uniform(1.0, 50.0)))
+        assert dec.mem_gb <= budget + 1e-9
+        if dec and np.isfinite(dec.units):
+            # admitted units actually fit under the budget
+            assert float(fn(dec.units)) <= budget * 1.02 + 1e-6
+
+
+def test_admission_calibrate_matches_two_point():
+    ctrl = AdmissionController()
+    fn = ctrl.calibrate("affine", [(2.0, 5.0), (4.0, 9.0)])
+    ref = calibrate_two_point("affine", 2.0, 5.0, 4.0, 9.0)
+    assert fn.family == "affine"
+    assert np.isclose(fn.m, ref.m) and np.isclose(fn.b, ref.b)
+    # >2 probes falls back to least squares on the same family
+    fn3 = ctrl.calibrate("affine", [(1.0, 3.0), (2.0, 5.0), (4.0, 9.0)])
+    assert abs(float(fn3(8.0)) - 17.0) < 0.5
+
+
+def test_admission_calibrate_rejects_single_probe():
+    with pytest.raises(ValueError):
+        AdmissionController().calibrate("affine", [(2.0, 5.0)])
+
+
+def test_admission_effective_budget_shading():
+    ctrl = AdmissionController()
+    assert ctrl.effective_budget(64.0) == 64.0
+    assert ctrl.effective_budget(64.0, safety_margin=0.25) == 48.0
+    assert ctrl.effective_budget(64.0, conservative=True) == 32.0
+    assert ctrl.effective_budget(64.0, oom_count=2) == 16.0
+    # backoff saturates at max_oom_shifts
+    assert ctrl.effective_budget(64.0, oom_count=9) == \
+        ctrl.effective_budget(64.0, oom_count=3)
+
+
+def test_admission_floor_and_cap():
+    ctrl = AdmissionController()
+    fn = MemoryFunction("affine", 0.0, 1.0)   # y == x
+    assert ctrl.admit(fn, 10.0).units == pytest.approx(10.0)
+    assert ctrl.admit(fn, 10.0, cap=4.0).units == pytest.approx(4.0)
+    assert not ctrl.admit(fn, 10.0, floor=20.0)
+
+
+def test_admit_batch_serving_semantics():
+    ctrl = AdmissionController()
+    fn = MemoryFunction("affine", 1.0, 0.5)   # weights + per-request GB
+    assert ctrl.admit_batch(fn, 5.0) == 8
+    assert ctrl.admit_batch(fn, 5.0, max_batch=3) == 3
+    # a model that barely fits still serves one request at a time
+    assert ctrl.admit_batch(fn, 0.1) == 1
+    # saturating curve under a generous budget -> bounded by max_batch
+    sat = MemoryFunction("exp_saturation", 2.0, 1.0)
+    assert ctrl.admit_batch(sat, 10.0, max_batch=64) == 64
+    # ...and REQUIRES a bound: unbounded admission must not silently
+    # return a huge batch
+    with pytest.raises(ValueError):
+        ctrl.admit_batch(sat, 10.0)
+
+
+# --- arrival streams -------------------------------------------------------
+
+def test_poisson_arrivals_shape_and_determinism(suite):
+    apps, _ = suite
+    acfg = ArrivalConfig(rate_per_s=0.05, n_jobs=40)
+    a1 = poisson_arrivals(apps, acfg, seed=9)
+    a2 = poisson_arrivals(apps, acfg, seed=9)
+    assert len(a1) == 40
+    assert [x.t for x in a1] == [x.t for x in a2]
+    assert all(x1.app.name == x2.app.name for x1, x2 in zip(a1, a2))
+    ts = [x.t for x in a1]
+    assert ts == sorted(ts) and ts[0] > 0
+    assert poisson_arrivals(apps, acfg, seed=10)[0].t != ts[0]
+
+
+def test_poisson_arrivals_horizon_and_weights(suite):
+    apps, _ = suite
+    acfg = ArrivalConfig(rate_per_s=0.05, n_jobs=200, horizon_s=400.0)
+    arr = poisson_arrivals(apps, acfg, seed=0)
+    assert 0 < len(arr) < 200
+    assert all(a.t <= 400.0 for a in arr)
+    # degenerate weights pin the stream to one app
+    w = np.zeros(len(apps))
+    w[3] = 1.0
+    arr = poisson_arrivals(apps, ArrivalConfig(n_jobs=10, app_weights=w),
+                           seed=0)
+    assert all(a.app is apps[3] for a in arr)
+    with pytest.raises(ValueError):
+        poisson_arrivals(apps, ArrivalConfig(app_weights=[1.0]), seed=0)
+
+
+def test_trace_arrivals_replay(suite):
+    apps, _ = suite
+    trace = [(50.0, apps[1].name, "large"), (10.0, apps[0].name, 3.5)]
+    arr = trace_arrivals(trace, apps)
+    assert [a.t for a in arr] == [10.0, 50.0]
+    assert arr[0].items == 3.5 and arr[1].items == 1000.0
+    with pytest.raises(KeyError):
+        trace_arrivals([(0.0, "no.such.app", 1.0)], apps)
+
+
+def test_sample_input_size_respects_class_mix():
+    rng = np.random.default_rng(0)
+    xs = {sample_input_size(rng, {"small": 1.0}) for _ in range(20)}
+    assert xs == {0.3}
+
+
+def test_size_class_of_round_trips_table4():
+    for cls, items in INPUT_SIZES_M_ITEMS.items():
+        assert size_class_of(items) == cls
+    assert size_class_of(2.0) == "small"     # log-nearest, not linear
+    assert size_class_of(200.0) == "large"
+
+
+# --- open-arrival simulator invariants -------------------------------------
+
+class UnderPredictPolicy(Policy):
+    """Deliberately under-predicts memory 5x -> executors overflow their
+    hosts -> OOM kills and requeues (the conservation stressor)."""
+    uses_profiling = True
+
+    def __init__(self):
+        super().__init__(None)
+
+    def predict(self, job, rng):
+        t = job.app.true_fn
+        return MemoryFunction(t.family, t.m * 0.2, t.b), {}
+
+
+def _items_in_flight(sim, job):
+    return sum(e.items_left for h in sim.hosts for e in h.execs
+               if e.job is job)
+
+
+def test_arrival_stream_conserves_items_under_oom(suite):
+    """done + unassigned + in-flight == items for every job at every
+    scheduling step, even while OOM kills requeue work."""
+    apps, _ = suite
+    acfg = ArrivalConfig(rate_per_s=0.05, n_jobs=15)
+    arrivals = poisson_arrivals(apps, acfg, seed=4)
+    cfg = SimConfig(n_hosts=8)
+    sim = Simulator(None, UnderPredictPolicy(), cfg, seed=4,
+                    arrivals=arrivals)
+    orig_spawn, orig_remove = sim._spawn, sim._remove_exec
+
+    def check(job):
+        total = job.done + job.unassigned + _items_in_flight(sim, job)
+        assert total == pytest.approx(job.items, rel=1e-6), job.jid
+
+    def spawn_spy(job, host, items, mt, mc, delay=0.0):
+        e = orig_spawn(job, host, items, mt, mc, delay)
+        check(job)
+        return e
+
+    def remove_spy(e, requeue):
+        orig_remove(e, requeue)
+        check(e.job)
+
+    sim._spawn, sim._remove_exec = spawn_spy, remove_spy
+    out = sim.run()
+    assert out["oom_count"] > 0        # the stressor actually fired
+    for job in sim.jobs:               # everything still completed
+        assert job.finish is not None
+        assert job.done == pytest.approx(job.items, rel=1e-6)
+
+
+def test_open_arrival_memory_never_overclaimed(suite):
+    """Scheduler invariant survives the open-arrival path: booked memory
+    never exceeds host capacity at spawn time."""
+    apps, moe = suite
+    acfg = ArrivalConfig(rate_per_s=0.1, n_jobs=20)
+    arrivals = poisson_arrivals(apps, acfg, seed=2)
+    cfg = SimConfig(n_hosts=10)
+    sim = Simulator(None, OursPolicy(moe), cfg, seed=2, arrivals=arrivals)
+    orig = sim._spawn
+
+    def spy(job, host, items, mt, mc, delay=0.0):
+        e = orig(job, host, items, mt, mc, delay)
+        assert host.mem_claimed <= cfg.host_mem_gb + 1e-6
+        return e
+
+    sim._spawn = spy
+    out = sim.run()
+    assert all(j.finish is not None for j in sim.jobs)
+
+
+def test_open_scenario_skips_empty_streams(suite):
+    """A horizon-truncated empty stream must not fold stp=0 into the
+    gmean (which would collapse the aggregate for every policy); a run
+    where EVERY stream is empty is an error, not a number."""
+    apps, moe = suite
+    tight = ArrivalConfig(rate_per_s=0.0005, n_jobs=5, horizon_s=20.0)
+    with pytest.raises(ValueError):
+        run_open_scenario(apps, lambda s: OursPolicy(moe), tight,
+                          n_streams=2, seed=5)
+
+
+def test_open_arrival_determinism(suite):
+    apps, moe = suite
+    acfg = ArrivalConfig(rate_per_s=0.05, n_jobs=12)
+    r1 = run_open_scenario(apps, lambda s: OursPolicy(moe), acfg,
+                           n_streams=2, seed=5, window_s=1000.0)
+    r2 = run_open_scenario(apps, lambda s: OursPolicy(moe), acfg,
+                           n_streams=2, seed=5, window_s=1000.0)
+    assert r1["stp_gmean"] == r2["stp_gmean"]
+    assert r1["antt_gmean"] == r2["antt_gmean"]
+    assert r1["windows"] == r2["windows"]
+    r3 = run_open_scenario(apps, lambda s: OursPolicy(moe), acfg,
+                           n_streams=2, seed=6)
+    assert r3["stp_gmean"] != r1["stp_gmean"]
+
+
+def test_batch_path_unchanged_by_arrival_refactor(suite):
+    """jobs_spec batch mode == an arrival stream with every t=0 (the
+    closed-batch special case of the open system)."""
+    apps, moe = suite
+    jobs = [(apps[i], 30.0) for i in (0, 5, 11, 17)]
+    cfg = SimConfig(n_hosts=6)
+    out_batch = Simulator(jobs, OursPolicy(moe), cfg, seed=3).run()
+    arrivals = [Arrival(0.0, app, items) for app, items in jobs]
+    out_open = Simulator(None, OursPolicy(moe), cfg, seed=3,
+                         arrivals=arrivals).run()
+    assert out_batch["stp"] == out_open["stp"]
+    assert out_batch["antt"] == out_open["antt"]
+
+
+def test_windowed_metrics_account_for_every_finish(suite):
+    apps, moe = suite
+    acfg = ArrivalConfig(rate_per_s=0.05, n_jobs=15)
+    arrivals = poisson_arrivals(apps, acfg, seed=8)
+    sim = Simulator(None, OursPolicy(moe), SimConfig(n_hosts=8), seed=8,
+                    arrivals=arrivals)
+    out = sim.run()
+    wins = windowed_metrics(out, 1500.0)
+    finished = sum(1 for f in out["finish_times"] if f is not None)
+    assert sum(w["completed"] for w in wins) == finished
+    assert wins[-1]["unfinished"] == len(arrivals) - finished
+    assert sum(w["arrived"] for w in wins) <= len(arrivals)
+    assert all(w["stp"] >= 0.0 for w in wins)
+    with pytest.raises(ValueError):
+        windowed_metrics(out, 0.0)
+
+
+# --- online predictor refresh ----------------------------------------------
+
+def test_online_refresher_folds_in_novel_class(suite):
+    apps, _ = suite
+    moe = MoEPredictor().fit(training_apps(apps))
+    novel = _novel_app(seed=1)
+    fam0, _, conf0 = moe.select_family(novel.features)
+    assert not conf0                   # unseen cluster -> unconfident
+    ref = OnlineRefresher(moe)
+    xs = np.asarray([1.0, 50.0, 100.0])
+    ys = np.asarray(novel.true_fn(xs))
+    assert ref.observe(novel.features, xs, ys) == "affine"
+    fam1, _, conf1 = moe.select_family(novel.features)
+    assert conf1 and fam1 == "affine"
+    # a twin arrival is now confident -> rejected (no table bloat)
+    twin = _novel_app(seed=1)
+    assert ref.observe(twin.features, xs, ys) is None
+    assert ref.stats() == {"accepted": 1, "rejected": 1, "table_full": 0}
+    # a full table drops offers and says so
+    ref.max_updates = 1
+    third = _novel_app(seed=9, shift=5.0, cluster_seed=77)
+    assert ref.observe(third.features, xs, ys) is None
+    assert ref.stats()["table_full"] == 1
+
+
+def test_online_refresher_rejects_noisy_fits(suite):
+    apps, _ = suite
+    moe = MoEPredictor().fit(training_apps(apps))
+    ref = OnlineRefresher(moe)
+    novel = _novel_app(seed=2)
+    xs = np.asarray([1.0, 50.0, 100.0])
+    ys = np.asarray([5.0, 80.0, 20.0])   # not any family's curve
+    assert ref.observe(novel.features, xs, ys) is None
+    assert ref.rejected == 1
+    # too few probes is also a rejection
+    assert ref.observe(novel.features, xs[:2], ys[:2]) is None
+
+
+def test_online_refresher_rejects_ambiguous_flat_curve(suite):
+    """A noisy flat probe curve fits EVERY family about equally well —
+    the argmin is measurement noise, and folding it in would label the
+    cluster with an arbitrary family. (Noiseless curves are fine: there
+    the generating family is distinguishably best even when flat.)"""
+    apps, _ = suite
+    moe = MoEPredictor().fit(training_apps(apps))
+    ref = OnlineRefresher(moe)
+    novel = _novel_app(seed=4)
+    xs = np.asarray([0.1, 1.5, 3.0])
+    ys = np.asarray([6.05, 6.00, 6.14])  # ~flat + 2% measurement noise
+    assert ref.observe(novel.features, xs, ys) is None
+    assert ref.rejected == 1
+
+
+def test_partial_update_requires_fit():
+    with pytest.raises(RuntimeError):
+        MoEPredictor().partial_update(np.zeros(len(FEATURE_NAMES)),
+                                      "affine")
+
+
+def test_partial_update_keeps_second_novel_cluster_unconfident(suite):
+    """Widening the scaler envelope contracts KNN distances; the
+    confidence threshold must contract with them, or a SECOND unseen
+    cluster would suddenly look 'near' and lose the paper's
+    distance-based soundness fallback."""
+    apps, _ = suite
+    moe = MoEPredictor().fit(training_apps(apps))
+    other = _novel_app(seed=7, shift=3.5, cluster_seed=99)
+    assert not moe.select_family(other.features)[2]
+    moe.partial_update(_novel_app(seed=1).features, "affine")
+    # cluster A is now in the table; unrelated cluster B must still
+    # trigger the conservative fallback
+    assert not moe.select_family(other.features)[2]
+
+
+def test_partial_update_preserves_existing_accuracy(suite):
+    """Widening the scaler envelope for an out-of-range arrival must not
+    break selection on the original training clusters."""
+    apps, _ = suite
+    moe = MoEPredictor().fit(training_apps(apps))
+    before = sum(moe.select_family(a.features)[0] == a.family
+                 for a in apps)
+    moe.partial_update(_novel_app(seed=3).features, "affine")
+    after = sum(moe.select_family(a.features)[0] == a.family
+                for a in apps)
+    assert after >= before - 1         # at most negligible drift
+
+
+def test_ours_policy_refreshes_during_open_stream(suite):
+    """End-to-end: a stream containing a novel class teaches the
+    predictor while serving (the demo's assertion, minified)."""
+    apps, _ = suite
+    moe = MoEPredictor().fit(training_apps(apps))
+    novel = [_novel_app(seed=s) for s in range(3)]
+    universe = list(apps) + novel
+    w = np.asarray([0.2] * len(apps) + [3.0] * len(novel))
+    acfg = ArrivalConfig(rate_per_s=0.05, n_jobs=10, app_weights=w)
+    arrivals = poisson_arrivals(universe, acfg, seed=11)
+    assert any(a.app.suite == "NV" for a in arrivals)
+    ref = OnlineRefresher(moe)
+    sim = Simulator(None, OursPolicy(moe, refresher=ref),
+                    SimConfig(n_hosts=8), seed=11, arrivals=arrivals)
+    sim.run()
+    assert ref.accepted >= 1
+    # the novel CLUSTER is now confidently selectable, labeled with
+    # whatever family the in-stream probes supported (a flat curve is
+    # legitimately ambiguous between families — all fit within 5%)
+    fam, _, conf = moe.select_family(novel[0].features)
+    assert conf and fam == ref.history[0]

@@ -61,6 +61,7 @@ def test_train_step_reduces_loss_smoke():
     assert losses[-1] < losses[0] * 0.75, losses[::6]
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_full_batch():
     cfg = get_config("qwen3-0.6b", smoke=True).replace(
         param_dtype="float32", compute_dtype="float32", remat="none")
@@ -135,6 +136,7 @@ def test_error_feedback_unbiased_over_time():
                                atol=1e-2)
 
 
+@pytest.mark.slow
 def test_compressed_training_converges():
     cfg = get_config("qwen3-0.6b", smoke=True).replace(
         param_dtype="float32", compute_dtype="float32")

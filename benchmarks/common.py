@@ -14,6 +14,9 @@ import numpy as np
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
 N_MIXES = int(os.environ.get("REPRO_BENCH_MIXES", "8"))
+# --smoke (benchmarks/run.py): tiny n_jobs/n_hosts/n_mixes everywhere —
+# a CI-speed end-to-end pass over the bench plumbing, not a measurement
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 DRYRUN_JSON = os.path.join(RESULTS_DIR, "dryrun_baseline.json")
 
 _cache: Dict[str, object] = {}

@@ -17,11 +17,11 @@ from __future__ import annotations
 import copy
 from collections import Counter
 
-from benchmarks.common import N_MIXES, emit, get_suite, save_result
+from benchmarks.common import SMOKE, N_MIXES, emit, get_suite, save_result
 
-RATES_PER_S = (0.01, 0.05, 0.2)     # light / moderate / heavy load
-N_JOBS = 30
-N_HOSTS = 16                        # small enough that load contends
+RATES_PER_S = (0.05,) if SMOKE else (0.01, 0.05, 0.2)  # light/mod/heavy
+N_JOBS = 8 if SMOKE else 30
+N_HOSTS = 4 if SMOKE else 16        # small enough that load contends
 WINDOW_S = 2000.0
 POLICIES = ("ours", "oracle", "pairwise")
 

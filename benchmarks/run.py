@@ -2,6 +2,12 @@
 
 ``python -m benchmarks.run``              runs everything
 ``python -m benchmarks.run --bench fig06 roofline``  subset
+``python -m benchmarks.run --smoke --bench open_arrivals tpu_colocation``
+    tiny n_jobs/n_hosts/n_mixes end-to-end pass (the CI gate)
+``python -m benchmarks.run --placement sjf --bench fig06``
+    run every simulation under a non-default placement policy
+    (repro.sched.placement registry: fcfs / sjf / best-fit /
+    arrival-aware)
 
 Prints ``name,value,derived`` CSV rows; per-bench JSON lands in results/.
 """
@@ -9,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import os
 import sys
 import time
 import traceback
@@ -35,7 +42,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", nargs="*", default=None,
                     help="prefixes of benchmarks to run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny n_jobs/n_hosts/n_mixes smoke pass (CI)")
+    ap.add_argument("--placement", default=None,
+                    help="placement policy for every SimConfig "
+                         "(fcfs/sjf/best-fit/arrival-aware)")
     args = ap.parse_args()
+    # env, not arguments: bench modules build their SimConfigs
+    # themselves; the environment is read at (deferred) import time
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        os.environ.setdefault("REPRO_BENCH_MIXES", "2")
+    if args.placement is not None:
+        from repro.sched.placement import available_placements
+        if args.placement not in available_placements():
+            ap.error(f"unknown placement {args.placement!r} "
+                     f"(available: {available_placements()})")
+        os.environ["REPRO_PLACEMENT"] = args.placement
     todo = BENCHES if not args.bench else [
         b for b in BENCHES if any(b.startswith(p) for p in args.bench)]
     failures = []

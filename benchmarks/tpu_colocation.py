@@ -1,22 +1,53 @@
 """Beyond-paper: the paper's co-location scheduler applied to the TPU-jobs
 universe — the assigned (arch x shape) cells as schedulable jobs on a
 fleet of pods. The affine expert (our library extension) is what makes
-these weight-dominated/SSM curves predictable."""
+these weight-dominated/SSM curves predictable.
+
+Two scenarios:
+
+* **single-axis** (the original): pods expose one memory budget
+  (HBM-as-host_mem), admission inverts the calibrated curve alone.
+* **multi-axis** (vector-resource admission): the calibrated curve
+  budgets the pod's **hbm** axis while each job also pins **host
+  staging RAM** (input/token buffers, ~0.5 GB per M-item) against a
+  much smaller per-pod host_ram capacity.  Admission inverts along the
+  binding axis — for large splits the host_ram axis runs out before
+  HBM does, which the emitted ``binding_axes`` histogram shows.
+"""
 from __future__ import annotations
+
+from dataclasses import replace
 
 import numpy as np
 
-from benchmarks.common import N_MIXES, emit, load_dryrun, save_result
+from benchmarks.common import (SMOKE, N_MIXES, emit, load_dryrun,
+                               save_result)
 from repro.core import MoEPredictor, OraclePredictor, tpu_jobs_suite
+from repro.core.experts import MemoryFunction
 from repro.core.metrics import run_scenario
 from repro.core.simulator import (OraclePolicy, OursPolicy, PairwisePolicy,
                                   SimConfig)
+
+# host staging demand per admitted M-item (GB): token queues + input
+# buffers pinned in pod-host DRAM while the split is resident in HBM
+HOST_STAGING_GB_PER_ITEM = 0.5
+HOST_RAM_PER_POD_GB = 12.0
+
+
+def _staged(jobs):
+    """The multi-axis universe: same jobs, plus a host_ram side-car
+    demand curve (affine through ~0: staging scales with the split)."""
+    return [replace(j, aux_demand={"host_ram": MemoryFunction(
+        "affine", 0.25, HOST_STAGING_GB_PER_ITEM)}) for j in jobs]
 
 
 def main() -> dict:
     jobs = tpu_jobs_suite(load_dryrun())
     # "hosts" are pods: 256 chips x 16 GB HBM = 4 TB per pod; a 16-pod fleet
-    cfg = SimConfig(n_hosts=16, host_mem_gb=4096.0, min_alloc_gb=64.0)
+    n_mixes = 1 if SMOKE else max(N_MIXES // 2, 3)
+    n_jobs = 6 if SMOKE else 12
+    n_hosts = 4 if SMOKE else 16
+    cfg = SimConfig(n_hosts=n_hosts, host_mem_gb=4096.0, min_alloc_gb=64.0)
     moe = MoEPredictor().fit(jobs[:16])  # half the cells train the selector
     factories = {
         "ours": lambda m: OursPolicy(moe),
@@ -25,8 +56,8 @@ def main() -> dict:
     }
     payload = {}
     for name, factory in factories.items():
-        r = run_scenario(jobs, factory, n_jobs=12,
-                         n_mixes=max(N_MIXES // 2, 3), cfg=cfg, seed=9)
+        r = run_scenario(jobs, factory, n_jobs=n_jobs,
+                         n_mixes=n_mixes, cfg=cfg, seed=9)
         payload[name] = {"stp": r.stp_gmean,
                          "antt_reduction": r.antt_reduction_mean,
                          "oom": r.oom_total}
@@ -37,6 +68,33 @@ def main() -> dict:
         / payload["oracle"]["stp"]}
     emit("tpu_colocation_ours_frac_of_oracle",
          round(payload["derived"]["ours_frac_of_oracle"], 3))
+
+    # --- multi-axis: HBM primary + host staging RAM ---------------------
+    staged = _staged(jobs)
+    cfg_vec = SimConfig(n_hosts=n_hosts, host_mem_gb=4096.0,
+                        min_alloc_gb=64.0, primary_axis="hbm",
+                        extra_capacity={"host_ram": HOST_RAM_PER_POD_GB})
+    payload["multiaxis"] = {}
+    for name, factory in (("ours", factories["ours"]),
+                          ("oracle", factories["oracle"])):
+        r = run_scenario(staged, factory, n_jobs=n_jobs,
+                         n_mixes=n_mixes, cfg=cfg_vec, seed=9)
+        payload["multiaxis"][name] = {
+            "stp": r.stp_gmean,
+            "antt_reduction": r.antt_reduction_mean,
+            "oom": r.oom_total, "binding_axes": r.binding_axes}
+        emit(f"tpu_colocation_multiaxis_stp_{name}", round(r.stp_gmean, 3),
+             " ".join(f"{a}:{c}" for a, c in
+                      sorted(r.binding_axes.items())))
+    ours_bind = payload["multiaxis"]["ours"]["binding_axes"]
+    non_primary = sum(c for a, c in ours_bind.items()
+                      if a not in ("hbm", "cap"))
+    emit("tpu_colocation_multiaxis_nonprimary_bound", non_primary,
+         "admissions bound by a non-HBM axis (host staging RAM)")
+    if non_primary == 0:
+        raise AssertionError(
+            f"multi-axis scenario never exercised a non-primary binding "
+            f"axis: {ours_bind}")
     save_result("tpu_colocation", payload)
     return payload
 

@@ -45,10 +45,12 @@ def novel_apps(n: int = 6, seed: int = 123):
     return apps
 
 
-def run_stream(apps, arrivals, moe, cfg, refresh: bool):
+def run_stream(apps, arrivals, moe, cfg, refresh: bool,
+               placement: str = "fcfs"):
     ref = OnlineRefresher(moe) if refresh else None
-    sim = Simulator(None, OursPolicy(moe, refresher=ref), cfg, seed=0,
-                    arrivals=arrivals)
+    sim = Simulator(None, OursPolicy(moe, refresher=ref,
+                                     placement=placement),
+                    cfg, seed=0, arrivals=arrivals)
     out = sim.run()
     conservative = sum(j.conservative for j in sim.jobs
                        if j.app.suite == "NV")
@@ -61,6 +63,9 @@ def main():
     ap.add_argument("--rate", type=float, default=0.02,
                     help="Poisson arrival rate (jobs/s)")
     ap.add_argument("--hosts", type=int, default=16)
+    ap.add_argument("--placement", default="fcfs",
+                    help="queue/host-scan order: fcfs, sjf, best-fit, "
+                         "or arrival-aware (ANTT-optimizing)")
     args = ap.parse_args()
 
     spark = spark_sim_suite()
@@ -87,7 +92,7 @@ def main():
     for refresh in (False, True):
         moe = MoEPredictor().fit(training_apps(spark))
         out, conservative, ref = run_stream(
-            universe, arrivals, moe, cfg, refresh)
+            universe, arrivals, moe, cfg, refresh, args.placement)
         label = "online refresh" if refresh else "static predictor"
         print(f"{label:24s} {out['stp']:7.2f} {out['antt']:8.2f} "
               f"{conservative:13d}/{n_novel}"

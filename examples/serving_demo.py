@@ -46,16 +46,18 @@ def main():
     y1 = measured_footprint_gb(cfg, x1, args.max_len)
     y2 = measured_footprint_gb(cfg, x2, args.max_len)
     fn = ctrl.calibrate("affine", [(x1, y1), (x2, y2)])
-    admit = ctrl.admit_batch(fn, args.budget_gb)
+    dec = ctrl.admit_batch(fn, args.budget_gb)
+    admit = int(dec.units)
     print(f"footprint(batch) ~= {fn.m:.4f} + {fn.b:.5f} GB/slot "
           f"(calibrated at batch {x1},{x2})")
     print(f"HBM budget {args.budget_gb} GB -> admit {admit} "
           f"concurrent requests")
-    if float(fn(admit)) > args.budget_gb:
+    if dec.info["forced"]:
         # admit_batch keeps a server making progress (min_batch=1) even
-        # when the weights alone exceed the budget — say so
-        print(f"note: minimum batch exceeds the budget "
-              f"(footprint(1) = {float(fn(1)):.4f} GB); serving anyway")
+        # when the weights alone exceed the budget — the decision says so
+        print(f"note: forced admission — minimum batch exceeds the "
+              f"budget (footprint(1) = {float(fn(1)):.4f} GB); "
+              f"serving anyway")
     true_at_admit = measured_footprint_gb(cfg, admit, args.max_len)
     print(f"true footprint at admitted batch: {true_at_admit:.4f} GB "
           f"(err {abs(true_at_admit - float(fn(admit)))/true_at_admit*100:.2f}%)")

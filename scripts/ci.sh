@@ -1,15 +1,20 @@
 #!/usr/bin/env bash
 # Fast tier-1 gate with a hard wall-clock timeout, so the red/slow-suite
 # regression (hypothesis import killing collection; >2 min runs) cannot
-# silently come back.
+# silently come back.  After the fast pytest selection, a tiny --smoke
+# benchmark pass exercises the bench plumbing end-to-end (including the
+# multi-axis vector-admission scenario) inside the SAME wall-clock cap.
 #
-#   scripts/ci.sh            # fast selection, <= $CI_TIMEOUT_S (default 120)
+#   scripts/ci.sh            # fast selection + smoke, <= $CI_TIMEOUT_S (120)
 #   CI_FULL=1 scripts/ci.sh  # full suite incl. @slow tier-2 (longer cap)
+#   CI_SMOKE_BENCHES="..."   # override the smoke bench subset ("" skips)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 CI_TIMEOUT_S="${CI_TIMEOUT_S:-120}"
 PYTHON="${PYTHON:-python}"
+CI_SMOKE_BENCHES="${CI_SMOKE_BENCHES-open_arrivals tpu_colocation}"
+START_S=$SECONDS
 
 # Deps: the image bakes in the jax/pallas toolchain; install only what's
 # missing. A dep that is neither installed nor installable fails the
@@ -35,5 +40,27 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     "$PYTHON" -m pytest -x -q "${MARK_ARGS[@]+"${MARK_ARGS[@]}"}" || rc=$?
 if [ $rc -eq 124 ]; then
     echo "ci: FAILED — tier-1 exceeded the ${CI_TIMEOUT_S}s budget" >&2
+fi
+[ $rc -ne 0 ] && exit $rc
+
+# Smoke benchmarks ride the remaining budget of the same cap.
+if [ -n "$CI_SMOKE_BENCHES" ]; then
+    REMAIN_S=$(( CI_TIMEOUT_S - (SECONDS - START_S) ))
+    if [ "$REMAIN_S" -lt 10 ]; then
+        echo "ci: FAILED — no budget left for smoke benchmarks" \
+             "(${REMAIN_S}s of ${CI_TIMEOUT_S}s)" >&2
+        exit 1
+    fi
+    echo "ci: running smoke benchmarks (${REMAIN_S}s left):" \
+         "$CI_SMOKE_BENCHES"
+    # shellcheck disable=SC2086
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        timeout --signal=TERM --kill-after=15 "$REMAIN_S" \
+        "$PYTHON" -m benchmarks.run --smoke --bench $CI_SMOKE_BENCHES \
+        || rc=$?
+    if [ $rc -eq 124 ]; then
+        echo "ci: FAILED — smoke benchmarks exceeded the remaining" \
+             "${REMAIN_S}s budget" >&2
+    fi
 fi
 exit $rc

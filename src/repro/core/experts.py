@@ -78,7 +78,10 @@ class MemoryFunction:
         if self.family == "log":
             if b <= 0:
                 return np.inf if m <= y else 0.0
-            x = float(np.exp((y - m) / b))
+            # a budget far above the curve (e.g. a 4 TB HBM axis against
+            # a tens-of-GB log curve) overflows exp — that IS unbounded
+            with np.errstate(over="ignore"):
+                x = float(np.exp((y - m) / b))
             return x if x >= 1e-12 else 0.0
         if self.family == "affine":
             if b <= 0:

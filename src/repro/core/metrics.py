@@ -52,6 +52,15 @@ class ScenarioResult:
     antt_min: float
     antt_max: float
     oom_total: int
+    # axis -> count of admission decisions that axis bound ("cap" = the
+    # Spark chunk / remaining-work cap), summed over mixes — the
+    # observability hook for multi-axis (vector-budget) scenarios
+    binding_axes: Dict[str, int] = None
+
+
+def _merge_counts(total: Dict[str, int], part: Dict[str, int]) -> None:
+    for k, v in part.items():
+        total[k] = total.get(k, 0) + v
 
 
 def run_scenario(apps: List[AppProfile], policy_factory, n_jobs: int,
@@ -61,6 +70,7 @@ def run_scenario(apps: List[AppProfile], policy_factory, n_jobs: int,
     can be LOOCV-refit when needed)."""
     cfg = cfg or SimConfig()
     stps, antts, reds, ooms = [], [], [], 0
+    binding: Dict[str, int] = {}
     for mix in range(n_mixes):
         rng = np.random.default_rng([seed, mix, n_jobs])
         jobs = make_mix(apps, n_jobs, rng)
@@ -71,12 +81,13 @@ def run_scenario(apps: List[AppProfile], policy_factory, n_jobs: int,
         antts.append(out["antt"])
         reds.append(out["antt_reduction"])
         ooms += out["oom_count"]
+        _merge_counts(binding, out["binding_axes"])
     return ScenarioResult(
         stp_gmean=gmean(stps), antt_gmean=gmean(antts),
         antt_reduction_mean=float(np.mean(reds)),
         stp_min=float(np.min(stps)), stp_max=float(np.max(stps)),
         antt_min=float(np.min(antts)), antt_max=float(np.max(antts)),
-        oom_total=ooms)
+        oom_total=ooms, binding_axes=binding)
 
 
 def windowed_metrics(result: Dict, window_s: float) -> List[Dict]:
@@ -132,6 +143,7 @@ def run_open_scenario(apps: List[AppProfile], policy_factory,
     cfg = cfg or SimConfig()
     stps, antts, ooms = [], [], 0
     windows: List[List[Dict]] = []
+    binding: Dict[str, int] = {}
     unfinished = empty_streams = 0
     for stream in range(n_streams):
         # workload and simulator randomness must be INDEPENDENT — the
@@ -152,6 +164,7 @@ def run_open_scenario(apps: List[AppProfile], policy_factory,
         stps.append(res["stp"])
         antts.append(res["antt"])
         ooms += res["oom_count"]
+        _merge_counts(binding, res["binding_axes"])
         if window_s is not None:
             windows.append(windowed_metrics(res, window_s))
     if not stps:
@@ -161,7 +174,8 @@ def run_open_scenario(apps: List[AppProfile], policy_factory,
     return {"stp_gmean": gmean(stps), "antt_gmean": gmean(antts),
             "stp_min": float(np.min(stps)), "stp_max": float(np.max(stps)),
             "oom_total": ooms, "unfinished_total": unfinished,
-            "empty_streams": empty_streams, "windows": windows}
+            "empty_streams": empty_streams, "windows": windows,
+            "binding_axes": binding}
 
 
 def run_all_scenarios(apps, policy_factories: Dict[str, object],

@@ -41,6 +41,13 @@ class MoEPredictor:
     families: Sequence[str] = experts.FAMILIES
     knn_k: int = 1
     fallback_distance: float = 0.35
+    # online-row hygiene: a new row whose features sit within
+    # ``dedupe_tol`` (RMS per-dim distance, raw feature space) of an
+    # existing row with the SAME family adds no information — drop it;
+    # and at most ``max_online_rows`` online rows are kept, evicting the
+    # OLDEST online row first (offline training rows are never evicted)
+    dedupe_tol: float = 0.05
+    max_online_rows: int = 256
     scaler: Optional[Scaler] = None
     pca: Optional[PCA] = None
     knn: Optional[KNN] = None
@@ -49,6 +56,7 @@ class MoEPredictor:
     # partial updates can re-project when the scaler envelope widens
     _X_raw: Optional[np.ndarray] = None
     _y_raw: Optional[np.ndarray] = None
+    _n_fit: int = 0                    # offline rows; rows beyond are online
 
     def fit(self, train_apps: List[AppProfile], seed: int = 0
             ) -> "MoEPredictor":
@@ -63,6 +71,7 @@ class MoEPredictor:
         X = np.asarray(X, float)
         self._X_raw = X
         self._y_raw = np.asarray(y)
+        self._n_fit = len(X)
         self.scaler = Scaler.fit(X)
         Xs = self.scaler.transform(X)
         self.pca = PCA.fit(Xs, n_components=min(5, Xs.shape[1]))
@@ -70,19 +79,50 @@ class MoEPredictor:
                                          np.asarray(y))
         return self
 
-    def partial_update(self, features: np.ndarray, family: str) -> None:
+    @property
+    def n_online_rows(self) -> int:
+        return len(self._X_raw) - self._n_fit if self._X_raw is not None \
+            else 0
+
+    def _is_duplicate(self, f: np.ndarray, family: str) -> bool:
+        same = self._y_raw == family
+        if not np.any(same):
+            return False
+        d = self._X_raw[same] - f[None, :]
+        rms = np.sqrt(np.mean(d * d, axis=1))
+        return bool(np.min(rms) <= self.dedupe_tol)
+
+    def _drop_row(self, idx: int) -> None:
+        """Remove row ``idx`` from the raw table AND the projected KNN
+        table (rows correspond 1:1 in both append and rebuild paths)."""
+        self._X_raw = np.delete(self._X_raw, idx, axis=0)
+        self._y_raw = np.delete(self._y_raw, idx)
+        self.knn.X = np.delete(self.knn.X, idx, axis=0)
+        self.knn.y = np.delete(self.knn.y, idx)
+
+    def partial_update(self, features: np.ndarray, family: str) -> bool:
         """Online refresh hook (used by repro.sched.online): fold ONE
         newly profiled program into the selector without a full refit —
-        no re-profiling of training programs, no PCA re-fit.
+        no re-profiling of training programs, no PCA re-fit.  Returns
+        False when the row was dropped as a near-duplicate.
 
         The new row is appended to the KNN table; if it falls outside
         the training envelope, the [0,1] scaler bounds widen and the
         stored rows are re-projected through the FIXED PCA basis (an
-        O(n*d) matrix multiply)."""
+        O(n*d) matrix multiply).  The table is bounded: a row within
+        ``dedupe_tol`` of an existing same-family row is rejected, and
+        beyond ``max_online_rows`` online rows the oldest online row is
+        evicted (training rows are permanent)."""
         if self.knn is None:
             raise RuntimeError("partial_update() requires a fitted "
                                "predictor")
         f = np.asarray(features, float)
+        if self._is_duplicate(f, family):
+            return False
+        if self.max_online_rows <= 0:
+            return False                   # online rows disabled
+        if self.n_online_rows >= self.max_online_rows:
+            self._drop_row(self._n_fit)    # oldest online row
         self._X_raw = np.vstack([self._X_raw, f[None, :]])
         self._y_raw = np.append(self._y_raw, family)
         lo = np.minimum(self.scaler.lo, f)
@@ -104,6 +144,7 @@ class MoEPredictor:
             z = self.pca.transform(self.scaler.transform(f[None, :]))
             self.knn.X = np.vstack([self.knn.X, z])
             self.knn.y = np.append(self.knn.y, family)
+        return True
 
     # --- runtime ---------------------------------------------------------
     def select_family(self, features: np.ndarray

@@ -9,10 +9,14 @@ real consequences: moderate over-subscription causes paging (host-wide
 slowdown), large overflow OOM-kills the executor and its items are
 re-queued (paper Section 2.3).
 
-Admission sizing (predict -> calibrate -> budget-inverse) is owned by
-``repro.sched.admission.AdmissionController`` — the same controller the
-serving driver uses — policies only decide placement order and the
-budget each host offers.
+Admission sizing (predict -> calibrate -> budget-inverse along the
+binding axis of a vector budget: primary memory, CPU slack, secondary
+axes) is owned by ``repro.sched.admission.AdmissionController`` — the
+same controller the serving driver uses.  Queue ordering and host-scan
+order come from the ``repro.sched.placement`` registry
+(``SimConfig.placement``: fcfs / sjf / best-fit / arrival-aware);
+policies only decide the budget each host offers and how to size under
+it.
 
 Policies: OURS (mixture-of-experts), QUASAR-like (single ANN estimator),
 PAIRWISE (<=2 per host, claims all free memory), ONLINE-SEARCH (probing
@@ -28,6 +32,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import os
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
@@ -35,11 +40,22 @@ import numpy as np
 
 from repro.core.experts import MemoryFunction
 from repro.core.workloads import AppProfile
+# resources/placement are import-cycle-free (they never import
+# repro.core); admission is NOT — see the lazy import in Policy.__init__
+from repro.sched.placement import get_placement
+from repro.sched.resources import DemandModel, ResourceVector
 
-if TYPE_CHECKING:  # runtime import is lazy: repro.sched imports
-    # repro.core (experts/workloads), so importing it back at module
+if TYPE_CHECKING:  # runtime import is lazy: repro.sched.admission
+    # imports repro.core (experts), so importing it back at module
     # scope would be circular when repro.sched loads first
     from repro.sched.admission import AdmissionController
+
+
+def _default_placement() -> str:
+    # benchmarks/run.py --placement selects the queue/host-scan order
+    # for every SimConfig a bench module builds, without threading an
+    # argument through each of them
+    return os.environ.get("REPRO_PLACEMENT", "fcfs")
 
 
 @dataclass
@@ -73,6 +89,25 @@ class SimConfig:
     straggler_factor: float = 0.35
     speculative_backup: bool = True
     max_sim_time: float = 1e9
+    # --- vector-resource admission ------------------------------------
+    # The axis ``host_mem_gb`` capacitates and the calibrated memory
+    # function predicts.  The paper's clusters budget host RAM; the
+    # TPU-jobs universe budgets pod HBM (primary_axis="hbm") with host
+    # staging RAM as a secondary axis in extra_capacity.
+    primary_axis: str = "host_ram"
+    # additional per-host axis capacities, e.g. {"host_ram": 96.0} when
+    # the primary axis is hbm; jobs demand them via AppProfile.aux_demand
+    extra_capacity: Dict[str, float] = field(default_factory=dict)
+    # queue-ordering / host-scan policy (repro.sched.placement registry)
+    placement: str = field(default_factory=_default_placement)
+
+    def host_capacity(self) -> ResourceVector:
+        """Per-host capacity vector: the primary memory axis, the CPU
+        slack (admission gate, paper Section 6.8), and any extra axes."""
+        axes = {self.primary_axis: self.host_mem_gb,
+                "cpu": self.cpu_slack}
+        axes.update(self.extra_capacity)
+        return ResourceVector(**axes)
 
 
 @dataclass
@@ -107,14 +142,16 @@ class Executor:
     delay_until: float = 0.0          # online-search probe delay
     straggle: float = 1.0
     done_since_ckpt: float = 0.0
+    claimed_vec: Optional[ResourceVector] = None  # full per-axis booking
 
 
 @dataclass
 class Host:
     hid: int
-    mem_cap: float
+    mem_cap: float                    # primary-axis capacity (shortcut)
     execs: List[Executor] = field(default_factory=list)
     up: bool = True
+    capacity: Optional[ResourceVector] = None  # full axis capacities
 
     @property
     def mem_true(self) -> float:
@@ -127,6 +164,16 @@ class Host:
     @property
     def cpu_used(self) -> float:
         return sum(e.job.app.cpu_load for e in self.execs)
+
+    def free_vector(self) -> ResourceVector:
+        """Unbooked capacity per axis (capacity minus booked claims)."""
+        cap = self.capacity if self.capacity is not None \
+            else ResourceVector(host_ram=self.mem_cap)
+        used = {a: sum(e.claimed_vec.get(a, 0.0)
+                       if e.claimed_vec is not None else 0.0
+                       for e in self.execs)
+                for a in cap.axes}
+        return cap.headroom(ResourceVector(**used))
 
     def paging(self) -> bool:
         return self.mem_true > self.mem_cap
@@ -143,7 +190,9 @@ class Simulator:
         self.cfg = cfg
         self.rng = np.random.default_rng(seed)
         self.policy = policy
-        self.hosts = [Host(h, cfg.host_mem_gb) for h in range(cfg.n_hosts)]
+        capacity = cfg.host_capacity()
+        self.hosts = [Host(h, cfg.host_mem_gb, capacity=capacity)
+                      for h in range(cfg.n_hosts)]
         self.jobs: List[Job] = []
         if arrivals is not None:
             for jid, a in enumerate(sorted(arrivals, key=lambda a: a.t)):
@@ -162,6 +211,9 @@ class Simulator:
         self._eid = itertools.count()
         self.oom_count = 0
         self.paging_time = 0.0
+        # axis -> count of admission decisions it bound ("cap" = the
+        # Spark chunk / remaining-work cap bound before any resource)
+        self.binding_axes: Dict[str, int] = {}
 
     # --- event plumbing ---------------------------------------------------
     def _push(self, t: float, kind: str, payload=None):
@@ -205,9 +257,16 @@ class Simulator:
         if self.cfg.straggler_prob > 0 and \
                 self.rng.random() < self.cfg.straggler_prob:
             straggle = self.cfg.straggler_factor
+        # full per-axis booking: the primary-axis claim, the executor's
+        # average CPU load, and any secondary-axis demand at this split
+        axes = {a: float(fn(items))
+                for a, fn in job.app.aux_demand.items()}
+        axes[self.cfg.primary_axis] = mem_claimed
+        axes["cpu"] = job.app.cpu_load
         e = Executor(next(self._eid), job, host, items, mem_true,
                      mem_claimed, job.app.rate, self.t,
-                     delay_until=self.t + delay, straggle=straggle)
+                     delay_until=self.t + delay, straggle=straggle,
+                     claimed_vec=ResourceVector(**axes))
         job.unassigned -= items
         job.active += 1
         host.execs.append(e)
@@ -324,6 +383,7 @@ class Simulator:
                     "makespan": 0.0, "c_cl": [], "c_is": [],
                     "arrivals": [], "finish_times": [], "unfinished": 0,
                     "oom_count": self.oom_count,
+                    "binding_axes": dict(self.binding_axes),
                     "util_trace": self.util_trace}
         # turnaround is measured from each job's arrival (0 for batch);
         # unfinished jobs are CENSORED at the simulation cap, arrival-
@@ -351,6 +411,7 @@ class Simulator:
                 "finish_times": [j.finish for j in self.jobs],
                 "unfinished": unfinished,
                 "oom_count": self.oom_count,
+                "binding_axes": dict(self.binding_axes),
                 "util_trace": self.util_trace}
 
 
@@ -359,76 +420,115 @@ class Simulator:
 # ---------------------------------------------------------------------------
 
 class Policy:
-    """Base: predictor-driven best-fit co-location (the paper's runtime).
+    """Base: predictor-driven co-location (the paper's runtime).
 
     Budget-inverse sizing and budget shading are delegated to the shared
     :class:`repro.sched.admission.AdmissionController` (the same object
-    the serving driver admits request batches through)."""
+    the serving driver admits request batches through); queue ordering
+    and host-scan order come from the ``repro.sched.placement`` registry
+    (``cfg.placement``)."""
     name = "base"
     uses_profiling = True
 
     def __init__(self, predictor,
-                 admission: Optional["AdmissionController"] = None):
+                 admission: Optional["AdmissionController"] = None,
+                 placement=None):
+        """``placement`` (a name or PlacementPolicy instance) overrides
+        ``SimConfig.placement`` for this policy only."""
         if admission is None:
             from repro.sched.admission import AdmissionController
             admission = AdmissionController()
         self.predictor = predictor
         self.admission = admission
+        self.placement = get_placement(placement) \
+            if isinstance(placement, str) else placement
+
+    def _placement(self, cfg: SimConfig):
+        return self.placement if self.placement is not None \
+            else get_placement(cfg.placement)
 
     def predict(self, job: Job, rng) -> Tuple[MemoryFunction, Dict]:
         return self.predictor.predict_function(job.app, job.items, rng)
 
+    def _demand_model(self, cfg: SimConfig, job: Job) -> DemandModel:
+        """The job's per-axis demand: the calibrated memory function on
+        the primary axis, the executor's average CPU load as a fixed
+        gate (paper Section 6.8 — moved out of the dispatcher into the
+        controller), plus any secondary-axis curves the workload
+        declares (e.g. host staging RAM for HBM-resident jobs)."""
+        curves = {cfg.primary_axis: job.fn_hat}
+        curves.update(job.app.aux_demand)
+        return DemandModel(curves, fixed={"cpu": job.app.cpu_load},
+                           primary_axis=cfg.primary_axis)
+
     def _sized_items(self, sim, job, host, budget) -> Optional[float]:
         """Budget-inverse executor sizing, shared by every predictor-
-        driven policy: items = min(memory budget via the predicted
-        function's inverse, the Spark partition chunk D/H). The chunk
+        driven policy: items = min over budgeted axes of the demand
+        inverse, capped by the Spark partition chunk D/H. The chunk
         cap preserves job-level parallelism (an executor that cached the
-        whole input would serialize the job); the memory cap is the
-        paper's mechanism. On an EMPTY host at least a chunk is taken
-        even if it won't fully fit in cache (spill == paging penalty)."""
+        whole input would serialize the job); the binding-axis inverse is
+        the paper's mechanism, vectorized. On an EMPTY host at least a
+        chunk is taken even if it won't fully fit in cache (spill ==
+        paging penalty)."""
         chunk = job.items / (sim.cfg.n_hosts * sim.cfg.tasks_per_slot)
-        n = self.admission.admit(job.fn_hat, budget,
-                                 cap=min(job.unassigned, chunk),
-                                 book=False).units
-        if not host.execs:
+        dec = self.admission.admit(self._demand_model(sim.cfg, job),
+                                   budget,
+                                   cap=min(job.unassigned, chunk),
+                                   book=False)
+        n = dec.units
+        # the empty-host override may only relax the PRIMARY memory
+        # axis (or the cap): overshooting it spills, and spill ==
+        # paging penalty is modeled.  A fixed gate (cpu slack) or a
+        # bound secondary axis has no overrun consequence model, so
+        # forcing a chunk past it would book beyond capacity silently
+        if not host.execs and \
+                dec.binding_axis in (sim.cfg.primary_axis, None):
             n = min(job.unassigned, max(n, chunk))
         # an executor below a quarter chunk isn't worth co-locating (and
         # unbounded micro-executors would storm the event loop); the tail
         # of a nearly-done job is always placeable
         if n < min(chunk * 0.25, job.unassigned) - 1e-12 or n <= 1e-9:
             return None
+        axis = dec.binding_axis or "cap"
+        sim.binding_axes[axis] = sim.binding_axes.get(axis, 0) + 1
         return n
 
-    def spawn_params(self, sim, job, host, budget) -> Optional[Tuple]:
+    def spawn_params(self, sim, job, host,
+                     budget: ResourceVector) -> Optional[Tuple]:
         """-> (items, mem_true, mem_claimed, delay) or None."""
         n = self._sized_items(sim, job, host, budget)
         if n is None:
             return None
         mem_true = job.app.measure(n)
-        mem_claimed = self.admission.book(job.fn_hat, n, budget)
+        mem_claimed = self.admission.book(
+            job.fn_hat, n, budget.get(sim.cfg.primary_axis, np.inf))
         return n, mem_true, mem_claimed, 0.0
 
     def dispatch(self, sim: Simulator, hosts=None):
-        """Offer capacity to jobs FCFS. ``hosts`` narrows the scan to the
-        hosts whose state changed (executor finish/OOM/repair) — a full
-        cluster scan happens only when a new job becomes schedulable."""
+        """Offer capacity to jobs in placement order. ``hosts`` narrows
+        the scan to the hosts whose state changed (executor finish/OOM/
+        repair) — a full cluster scan happens only when a new job
+        becomes schedulable."""
         cfg = sim.cfg
         hosts = hosts if hosts is not None else sim.hosts
-        for job in sim.jobs:
-            if job.fn_hat is None or job.unassigned <= 1e-9:
-                continue
-            for host in hosts:
+        placement = self._placement(cfg)
+        ready = [j for j in sim.jobs
+                 if j.fn_hat is not None and j.unassigned > 1e-9]
+        for job in placement.order_jobs(ready, now=sim.t):
+            for host in placement.order_hosts(job, hosts,
+                                              cfg.primary_axis):
                 if not host.up or job.unassigned <= 1e-9:
                     continue
                 if any(e.job is job for e in host.execs):
                     continue  # one executor per (job, host)
                 if job.oom_count >= 2 and host.execs:
                     continue  # isolation re-run after repeated OOM
-                free = host.mem_cap - host.mem_claimed
-                cpu_free = cfg.cpu_slack - host.cpu_used
-                if free < cfg.min_alloc_gb or \
-                        cpu_free < job.app.cpu_load:
+                free = host.free_vector()
+                if free.get(cfg.primary_axis, 0.0) < cfg.min_alloc_gb:
                     continue
+                # CPU admission lives in the controller now: the free
+                # vector carries the cpu axis and the demand model's
+                # fixed cpu load gates it inside admit()
                 budget = self.admission.effective_budget(
                     free, safety_margin=cfg.safety_margin,
                     conservative=getattr(job, "conservative", False),
@@ -445,11 +545,11 @@ class OursPolicy(Policy):
 
     def __init__(self, predictor,
                  admission: Optional["AdmissionController"] = None,
-                 refresher=None):
+                 refresher=None, placement=None):
         """``refresher`` (repro.sched.online.OnlineRefresher) folds each
         profiled arrival's calibration curve back into the predictor —
         the open-arrival online-learning loop."""
-        super().__init__(predictor, admission)
+        super().__init__(predictor, admission, placement)
         self.refresher = refresher
 
     def predict(self, job, rng):
@@ -497,8 +597,9 @@ class OnlineSearchPolicy(Policy):
         n = n_opt * qual
         mem_true = job.app.measure(n)
         delay = sim.cfg.online_search_eta * n / max(job.app.rate, 1e-12)
-        return n, mem_true, self.admission.book(job.fn_hat, n, budget), \
-            delay
+        mem_claimed = self.admission.book(
+            job.fn_hat, n, budget.get(sim.cfg.primary_axis, np.inf))
+        return n, mem_true, mem_claimed, delay
 
 
 class PairwisePolicy(Policy):
@@ -516,10 +617,12 @@ class PairwisePolicy(Policy):
     def dispatch(self, sim: Simulator, hosts=None):
         cfg = sim.cfg
         hosts = hosts if hosts is not None else sim.hosts
-        for job in sim.jobs:
-            if job.fn_hat is None or job.unassigned <= 1e-9:
-                continue
-            for host in hosts:
+        placement = self._placement(cfg)
+        ready = [j for j in sim.jobs
+                 if j.fn_hat is not None and j.unassigned > 1e-9]
+        for job in placement.order_jobs(ready, now=sim.t):
+            for host in placement.order_hosts(job, hosts,
+                                              cfg.primary_axis):
                 if not host.up or job.unassigned <= 1e-9:
                     continue
                 if len(host.execs) >= 2:
@@ -528,7 +631,7 @@ class PairwisePolicy(Policy):
                     continue
                 if job.oom_count >= 2 and host.execs:
                     continue  # isolation re-run after repeated OOM
-                free = host.mem_cap - host.mem_claimed
+                free = host.free_vector().get(cfg.primary_axis, 0.0)
                 if free < cfg.min_alloc_gb:
                     continue
                 # primary executor claims the Spark default heap; the

@@ -86,6 +86,10 @@ class AppProfile:
     rate: float                 # M-items / s per executor (unit share)
     features: np.ndarray        # 22-dim raw feature vector
     noise: float = 0.02         # multiplicative measurement noise
+    # secondary-axis demand curves (axis -> units->amount), e.g. host
+    # staging RAM for an HBM-resident TPU job; these are KNOWN resource
+    # models (not predicted) and gate admission via the demand vector
+    aux_demand: Dict[str, MemoryFunction] = field(default_factory=dict)
 
     def measure(self, x: float, rng: Optional[np.random.Generator] = None
                 ) -> float:

@@ -3,8 +3,18 @@ memory-budgeted admission (the serving-side co-location hook).
 
 Admission routes through ``repro.sched.AdmissionController`` — the SAME
 predict -> two-point-calibrate -> budget-inverse controller the cluster
-simulator's policies use, with requests as the work unit and HBM as the
-host budget.
+simulator's policies use — with requests as the work unit and the
+serving footprint on the **hbm axis** of a
+:class:`~repro.sched.resources.ResourceVector` budget.  Passing
+``--host-ram-gb`` adds a second budgeted axis (pinned host staging
+memory per request), and the admitted wave size becomes the min over
+per-axis inverses; the log reports which axis bound it.  When even a
+single request exceeds the budget the controller forces progress and
+flags the decision ``forced`` — logged here instead of booked silently.
+
+Queue order is pluggable via the ``repro.sched.placement`` registry
+(``--placement fcfs|sjf|best-fit|arrival-aware``): ``sjf`` serves short
+prompts first, shrinking per-wave padding.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 8 --decode-steps 16
@@ -13,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -20,15 +31,22 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as model_lib
-from repro.sched import AdmissionController
+from repro.sched import (AdmissionController, AdmissionDecision,
+                         DemandModel, ResourceVector, available_placements,
+                         get_placement)
+from repro.core.experts import MemoryFunction
 from repro.train.step import build_decode_step, build_prefill_step
 from repro.utils.tree import tree_bytes
 
 
 def admission_batch(cfg, max_len: int, budget_gb: float,
-                    controller: AdmissionController = None) -> int:
+                    controller: AdmissionController = None,
+                    host_ram_gb: float = 0.0,
+                    host_ram_per_req_gb: float = 0.0
+                    ) -> AdmissionDecision:
     """Paper-style: calibrate footprint(batch) at two small batches, admit
-    via the inverse under the HBM budget."""
+    via the binding-axis inverse under an HBM (+ optional host RAM)
+    budget vector."""
     controller = controller or AdmissionController()
 
     def fp(b):
@@ -36,7 +54,37 @@ def admission_batch(cfg, max_len: int, budget_gb: float,
         c = model_lib.init_cache(cfg, b, max_len, abstract_only=True)
         return (w + tree_bytes(c)) / 2 ** 30
     fn = controller.calibrate("affine", [(2, fp(2)), (4, fp(4))])
-    return controller.admit_batch(fn, budget_gb, min_batch=1)
+    curves = {"hbm": fn}
+    budget_axes = {"hbm": float(budget_gb)}
+    if host_ram_gb > 0.0:
+        # pinned host staging per in-flight request (I/O buffers, token
+        # queues) — a second budgeted axis that can bind before HBM
+        curves["host_ram"] = MemoryFunction(
+            "affine", 0.0, float(host_ram_per_req_gb))
+        budget_axes["host_ram"] = float(host_ram_gb)
+    demand = DemandModel(curves, primary_axis="hbm")
+    return controller.admit_batch(demand, ResourceVector(**budget_axes),
+                                  min_batch=1)
+
+
+@dataclass
+class _Request:
+    """Duck-typed for the placement registry's ordering hooks."""
+    rid: int
+    prompt_len: int
+    arrival: float = 0.0
+
+    @property
+    def c_iso(self) -> float:
+        return float(self.prompt_len)
+
+    @property
+    def items(self) -> float:
+        return float(self.prompt_len)
+
+    @property
+    def unassigned(self) -> float:
+        return float(self.prompt_len)
 
 
 def main():
@@ -46,28 +94,58 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--decode-steps", type=int, default=16)
-    ap.add_argument("--budget-gb", type=float, default=1.0)
+    ap.add_argument("--budget-gb", type=float, default=1.0,
+                    help="HBM budget for weights + KV")
+    ap.add_argument("--host-ram-gb", type=float, default=0.0,
+                    help="host staging budget (0 = unconstrained)")
+    ap.add_argument("--host-ram-per-req-gb", type=float, default=0.05,
+                    help="pinned host memory per in-flight request")
+    ap.add_argument("--placement", default="fcfs",
+                    choices=available_placements(),
+                    help="pending-queue order (sjf = short prompts first)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     max_len = args.prompt_len + args.decode_steps + 1
-    admit = min(admission_batch(cfg, max_len, args.budget_gb),
-                args.requests)
-    print(f"admitting {admit} concurrent requests under "
-          f"{args.budget_gb} GB")
+    dec = admission_batch(cfg, max_len, args.budget_gb,
+                          host_ram_gb=args.host_ram_gb,
+                          host_ram_per_req_gb=args.host_ram_per_req_gb)
+    admit = min(int(dec.units), args.requests)
+    axes = ", ".join(f"{a}={v:.3g}GB" for a, v in dec.budget.items())
+    print(f"admitting {admit} concurrent requests under [{axes}] "
+          f"(binding axis: {dec.binding_axis or 'request count'})")
+    if dec.info.get("forced"):
+        # admit_batch guarantees progress even when one request is over
+        # budget — observable, not silent, naming the violated axes
+        viol = "; ".join(
+            f"{a}: need {dec.info['demand'][a]:.3g} GB > "
+            f"{dec.budget[a]:.3g} GB" for a in dec.info["forced_axes"])
+        print(f"WARNING: forced admission of {int(dec.units)} "
+              f"request(s) over budget ({viol}); expect paging/"
+              f"preemption risk")
 
     params = model_lib.init(cfg, jax.random.key(0))
     prefill = jax.jit(build_prefill_step(cfg, max_len))
     decode = jax.jit(build_decode_step(cfg), donate_argnums=(1,))
 
     rng = np.random.default_rng(0)
+    # heterogeneous prompt lengths make queue order meaningful: sjf packs
+    # short prompts together, shrinking per-wave padding
+    queue = [_Request(i, int(rng.integers(max(args.prompt_len // 2, 1),
+                                          args.prompt_len + 1)),
+                      arrival=float(i))
+             for i in range(args.requests)]
+    queue = get_placement(args.placement).order_jobs(queue, now=0.0)
+
     served, t0 = 0, time.time()
-    pending = args.requests
-    while pending > 0:
-        B = min(admit, pending)
-        toks = jnp.asarray(rng.integers(
-            3, cfg.vocab_size, (B, args.prompt_len)), jnp.int32)
-        batch = {"tokens": toks}
+    while queue:
+        wave, queue = queue[:admit], queue[admit:]
+        B, L = len(wave), max(r.prompt_len for r in wave)
+        toks = np.full((B, L), 3, np.int32)
+        for i, r in enumerate(wave):
+            toks[i, L - r.prompt_len:] = rng.integers(
+                3, cfg.vocab_size, r.prompt_len)
+        batch = {"tokens": jnp.asarray(toks)}
         if cfg.family == "encdec":
             batch["enc_embeds"] = jnp.asarray(
                 rng.normal(0, 0.02, (B, 8, cfg.d_model)), jnp.float32)
@@ -82,9 +160,9 @@ def main():
             outs.append(jnp.argmax(lg, -1).astype(jnp.int32))
         gen = jnp.concatenate(outs, axis=1)
         served += B
-        pending -= B
-        print(f"wave: {B} requests, {gen.shape[1]} tokens each "
-              f"(sample: {np.asarray(gen[0])[:8].tolist()})", flush=True)
+        print(f"wave: {B} requests (prompts <= {L}), {gen.shape[1]} "
+              f"tokens each (sample: {np.asarray(gen[0])[:8].tolist()})",
+              flush=True)
     dt = time.time() - t0
     tot = served * args.decode_steps
     print(f"served {served} requests / {tot} tokens in {dt:.1f}s "

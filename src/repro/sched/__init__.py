@@ -1,23 +1,46 @@
 """Online scheduling subsystem: the paper's runtime, factored out.
 
-Three parts, shared by the cluster simulator (``core/simulator.py``) and
+Five parts, shared by the cluster simulator (``core/simulator.py``) and
 the serving driver (``launch/serve.py``):
 
+* ``resources``  — :class:`ResourceVector` (named axes ``host_ram`` /
+  ``cpu`` / ``hbm`` / ``net`` with ``+``/``-``/``fits``/``headroom``
+  algebra) and :class:`DemandModel` (per-axis demand curves + fixed
+  per-placement loads), so admission reasons about multiple resources
+  jointly instead of one GB number.
 * ``admission``  — :class:`AdmissionController`: predict -> two-point
-  calibrate -> budget-inverse admission (how many units fit under a
-  memory budget), plus the scheduler's budget-shading rules
-  (safety margin, conservative fallback, OOM backoff).
+  calibrate -> budget-inverse admission along the *binding axis* (min
+  over per-axis inverses), plus the scheduler's budget-shading rules
+  (safety margin, conservative fallback, OOM backoff).  The scalar
+  ``admit(fn, budget_gb)`` API remains as a shim over single-axis
+  vectors.
+* ``placement``  — :class:`PlacementPolicy` registry (``fcfs`` /
+  ``sjf`` / ``best-fit`` / ``arrival-aware``): queue ordering and
+  host-scan order, extracted from the dispatcher and selectable per run.
 * ``arrivals``   — open-arrival workload generation: Poisson or
   trace-driven arrival streams with per-class input-size mixes over an
   application universe, so the system runs as a continuously-fed queue
   rather than a batch at t=0.
 * ``online``     — :class:`OnlineRefresher`: folds newly profiled
   arrivals back into a fitted :class:`~repro.core.predictor.MoEPredictor`
-  (KNN append + scaler-bound widening) without a full refit.
+  (KNN append + scaler-bound widening) without a refit.
 """
+from repro.sched.resources import (  # noqa: F401
+    AXES,
+    MEMORY_AXES,
+    DemandModel,
+    ResourceVector,
+    single_axis,
+)
 from repro.sched.admission import (  # noqa: F401
     AdmissionController,
     AdmissionDecision,
+)
+from repro.sched.placement import (  # noqa: F401
+    PlacementPolicy,
+    available_placements,
+    get_placement,
+    register_placement,
 )
 from repro.sched.arrivals import (  # noqa: F401
     Arrival,

@@ -1,34 +1,51 @@
-"""Memory-budgeted admission control (paper Sections 4.1/4.2).
+"""Budget-inverse admission control (paper Sections 4.1/4.2), over
+vector resource budgets.
 
 The paper's runtime decides, per host, how much work to admit from a
 predicted memory function: select an expert family, calibrate it on two
-small probes, then invert it under the free-memory budget. The cluster
-simulator's policies and the serving driver both consumed private copies
-of this logic; :class:`AdmissionController` is the single shared owner.
+small probes, then invert it under the free-memory budget.  This module
+owns that loop for every consumer (simulator policies, serving driver),
+generalized from a single scalar GB budget to a
+:class:`~repro.sched.resources.ResourceVector` over named axes
+(``host_ram`` / ``cpu`` / ``hbm`` / ``net``): the admitted unit count is
+the **min over per-axis inverses** of a :class:`DemandModel`, and the
+decision records which axis bound it.
+
+The original scalar API is a thin shim: ``admit(fn, budget_gb)`` wraps
+the curve in a single-axis demand model and the float in a single-axis
+budget vector, and takes exactly the same code path — results are
+bit-identical to the pre-vector controller (pinned by
+``tests/test_resources.py``).
 
 Units are deliberately abstract ("units" = M-items for Spark jobs,
 concurrent requests for the serving batch) — the controller only cares
-that ``fn(units) -> GB`` is monotone.
+that each per-axis curve ``fn(units) -> amount`` is monotone.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import experts
 from repro.core.experts import MemoryFunction
+from repro.sched.resources import (MEMORY_AXES, DemandModel, ResourceVector,
+                                   single_axis)
 
 
 @dataclass(frozen=True)
 class AdmissionDecision:
     """Outcome of a budget-inverse admission query."""
     units: float          # admitted work units (0 if nothing fits)
-    mem_gb: float         # memory booked for those units (<= budget_gb)
-    budget_gb: float      # the shaded budget the inverse ran against
-    fn: MemoryFunction    # the calibrated function used
+    mem_gb: float         # primary-axis booking for those units
+    budget_gb: float      # primary-axis shaded budget the inverse ran on
+    fn: Optional[MemoryFunction]  # calibrated primary curve (if any)
     info: Dict = field(default_factory=dict)
+    binding_axis: Optional[str] = None   # axis that bound the inverse
+    #   (None: the caller's cap bound first, or nothing constrained)
+    booked: Optional[ResourceVector] = None  # full per-axis booking
+    budget: Optional[ResourceVector] = None  # full shaded budget vector
 
     def __bool__(self) -> bool:
         return self.units > 0.0
@@ -38,8 +55,8 @@ class AdmissionController:
     """Owns predict -> two-point-calibrate -> budget-inverse admission.
 
     Stateless with respect to any particular host or request stream;
-    scheduler policies keep one instance and feed it per-decision budgets.
-    """
+    scheduler policies keep one instance and feed it per-decision
+    budgets (scalar GB or :class:`ResourceVector`)."""
 
     def __init__(self, safety_margin: float = 0.0,
                  conservative_factor: float = 0.5,
@@ -66,74 +83,147 @@ class AdmissionController:
         return experts.fit(family, xs, ys)
 
     # --- budget shading --------------------------------------------------
-    def effective_budget(self, free_gb: float, *,
+    def effective_budget(self, free: Union[float, ResourceVector], *,
                          safety_margin: Optional[float] = None,
                          conservative: bool = False,
-                         oom_count: int = 0) -> float:
-        """Shade raw free memory by the scheduler's risk rules: global
+                         oom_count: int = 0
+                         ) -> Union[float, ResourceVector]:
+        """Shade raw free capacity by the scheduler's risk rules: global
         safety margin, the low-confidence conservative fallback (paper
         Section 6.9), and exponential backoff after OOM kills (paper
-        Section 2.3)."""
+        Section 2.3).
+
+        On a :class:`ResourceVector`, only the memory axes
+        (``host_ram``/``hbm``) are shaded — CPU and link bandwidth are
+        average-rate resources where overshoot time-shares rather than
+        OOM-kills, so risk shading does not apply."""
         margin = self.safety_margin if safety_margin is None \
             else float(safety_margin)
-        budget = float(free_gb) * (1.0 - margin)
-        if conservative:
-            budget *= self.conservative_factor
-        budget *= self.oom_backoff ** min(int(oom_count),
-                                          self.max_oom_shifts)
-        return budget
+        shifts = min(int(oom_count), self.max_oom_shifts)
+
+        def shade(v: float) -> float:
+            budget = float(v) * (1.0 - margin)
+            if conservative:
+                budget *= self.conservative_factor
+            budget *= self.oom_backoff ** shifts
+            return budget
+
+        if isinstance(free, ResourceVector):
+            return ResourceVector(**{
+                a: (shade(v) if a in MEMORY_AXES else v)
+                for a, v in free.items()})
+        return shade(free)
 
     # --- budget-inverse admission ---------------------------------------
-    def admit(self, fn: MemoryFunction, budget_gb: float, *,
+    @staticmethod
+    def _normalize(demand: Union[MemoryFunction, DemandModel],
+                   budget: Union[float, ResourceVector]
+                   ) -> Tuple[DemandModel, ResourceVector]:
+        """Scalar back-compat shim: a bare curve becomes a single-axis
+        demand model, a bare float a single-axis budget vector on the
+        demand's primary axis."""
+        if isinstance(demand, DemandModel):
+            dm = demand
+        else:
+            dm = DemandModel.scalar(demand)
+        if isinstance(budget, ResourceVector):
+            bv = budget
+        else:
+            bv = single_axis(dm.primary_axis, float(budget))
+        return dm, bv
+
+    @staticmethod
+    def _book_vector(dm: DemandModel, units: float,
+                     bv: ResourceVector) -> ResourceVector:
+        """Per-axis booking for ``units``: predicted demand, clamped to
+        the budget that admitted it.  Infinite admissions (a curve that
+        saturates below its budget, with no cap) book the whole budgeted
+        axis — the caller must bound the work some other way."""
+        axes: Dict[str, float] = {}
+        for a, fn in dm.curves.items():
+            if not np.isfinite(units):
+                axes[a] = bv[a] if a in bv else 0.0
+                continue
+            amount = float(fn(units))
+            axes[a] = min(amount, bv[a]) if a in bv else amount
+        for a, v in dm.fixed.items():
+            axes[a] = axes.get(a, 0.0) + v
+        return ResourceVector(**axes)
+
+    def admit(self, demand: Union[MemoryFunction, DemandModel],
+              budget: Union[float, ResourceVector], *,
               cap: float = np.inf, floor: float = 0.0,
               book: bool = True,
               info: Optional[Dict] = None) -> AdmissionDecision:
-        """Largest ``units <= cap`` with ``fn(units) <= budget_gb``;
-        zero-unit decision when that falls below ``floor``. An infinite
-        result (curve saturates below the budget AND no cap) books the
-        whole budget — the caller must bound the work some other way.
+        """Largest ``units <= cap`` whose demand fits ``budget`` on every
+        budgeted axis (min over per-axis inverses); zero-unit decision
+        when that falls below ``floor``.  The decision records the
+        ``binding_axis`` — ``None`` when the caller's ``cap`` (or
+        nothing) bound first.
 
-        ``book=False`` skips the booked-memory evaluation (``mem_gb``
-        reads 0.0) for callers that only size — e.g. the simulator's
-        per-(job, host) candidate scan, which books separately after
-        adjusting the unit count."""
-        budget_gb = float(budget_gb)
-        units = float(min(fn.inverse(budget_gb), cap))
+        ``book=False`` skips the booked-demand evaluation (``mem_gb``
+        reads 0.0, ``booked`` is None) for callers that only size —
+        e.g. the simulator's per-(job, host) candidate scan, which books
+        separately after adjusting the unit count."""
+        dm, bv = self._normalize(demand, budget)
+        primary = dm.primary_axis
+        budget_gb = float(bv.get(primary, np.inf))
+        raw, binding = dm.inverse(bv)
+        units = float(min(raw, cap))
+        if units < raw:
+            binding = None                     # the cap bound first
         if units <= 0.0 or units < floor - 1e-12:
-            return AdmissionDecision(0.0, 0.0, budget_gb, fn,
-                                     dict(info or {}))
-        if not book:
-            mem = 0.0
-        elif np.isfinite(units):
-            mem = self.book(fn, units, budget_gb)
+            return AdmissionDecision(0.0, 0.0, budget_gb, dm.primary_fn,
+                                     dict(info or {}), binding, None, bv)
+        if book:
+            booked = self._book_vector(dm, units, bv)
+            mem = booked.get(primary, 0.0)
         else:
-            mem = budget_gb
-        return AdmissionDecision(units, mem, budget_gb, fn,
-                                 dict(info or {}))
+            booked, mem = None, 0.0
+        return AdmissionDecision(units, mem, budget_gb, dm.primary_fn,
+                                 dict(info or {}), binding, booked, bv)
 
     def book(self, fn: MemoryFunction, units: float,
              budget_gb: float) -> float:
-        """Memory to reserve for ``units``: the predicted footprint,
-        never more than the budget that admitted it."""
+        """Primary-axis memory to reserve for ``units``: the predicted
+        footprint, never more than the budget that admitted it."""
         return min(float(fn(units)), float(budget_gb))
 
-    def admit_batch(self, fn: MemoryFunction, budget_gb: float, *,
+    def admit_batch(self, demand: Union[MemoryFunction, DemandModel],
+                    budget: Union[float, ResourceVector], *,
                     min_batch: int = 1,
-                    max_batch: Optional[int] = None) -> int:
+                    max_batch: Optional[int] = None) -> AdmissionDecision:
         """Integer variant for request serving: whole requests only,
         always at least ``min_batch`` (a server must make progress even
-        when the model barely fits).
+        when the model barely fits).  When the forced minimum does NOT
+        fit the budget, the decision carries ``info['forced'] = True`` so
+        callers can log over-budget forced progress instead of booking
+        it silently.
 
-        An UNBOUNDED admission (the curve saturates below the budget)
-        requires an explicit ``max_batch`` — silently returning a huge
-        batch would be a foot-gun for any non-affine footprint."""
+        An UNBOUNDED admission (every budgeted curve saturates below its
+        budget) requires an explicit ``max_batch`` — silently returning
+        a huge batch would be a foot-gun for any non-affine footprint."""
+        dm, bv = self._normalize(demand, budget)
         cap = np.inf if max_batch is None else float(max_batch)
-        dec = self.admit(fn, budget_gb, cap=cap)
+        dec = self.admit(dm, bv, cap=cap)
         if not np.isfinite(dec.units):
+            fam = dec.fn.family if dec.fn is not None else "?"
             raise ValueError(
-                f"unbounded admission: {fn.family} footprint saturates "
-                f"below the {budget_gb} GB budget — pass max_batch")
+                f"unbounded admission: {fam} footprint saturates below "
+                f"the {dec.budget_gb} GB {dm.primary_axis} budget — "
+                f"pass max_batch")
         n = int(dec.units)
         if max_batch is not None:
             n = min(n, int(max_batch))
-        return max(n, int(min_batch))
+        n = max(n, int(min_batch))
+        need = dm.demand(n)
+        forced_axes = [a for a, v in need.items()
+                       if a in bv and v > bv[a] + 1e-9]
+        booked = self._book_vector(dm, float(n), bv)
+        return AdmissionDecision(
+            float(n), booked.get(dm.primary_axis, 0.0), dec.budget_gb,
+            dec.fn, {**dec.info, "forced": bool(forced_axes),
+                     "forced_axes": forced_axes,
+                     "demand": need.as_dict(),
+                     "min_batch": min_batch},
+            dec.binding_axis, booked, bv)

@@ -79,7 +79,12 @@ class OnlineRefresher:
                 errs[fn.family] * self.ambiguity_ratio, 1e-3):
             self.rejected += 1
             return None
-        self.predictor.partial_update(features, fn.family)
+        # the predictor may still drop the row as a near-duplicate of an
+        # existing same-family row (table hygiene) — count that as a
+        # rejection, not a fold
+        if self.predictor.partial_update(features, fn.family) is False:
+            self.rejected += 1
+            return None
         self.accepted += 1
         self.history.append(fn.family)
         return fn.family

@@ -1,0 +1,497 @@
+"""Property tests for the vector-resource admission API
+(repro/sched/resources.py + the vectorized AdmissionController) and the
+pluggable placement registry.
+
+Style mirrors tests/test_experts.py: every property is a checker driven
+by a deterministic seeded sweep, and the SAME checkers also run under
+hypothesis when it happens to be installed (the tier-1 suite must never
+depend on it).
+
+The back-compat pins live here too: closed- and open-arrival results for
+OURS / ORACLE / PAIRWISE under the default SimConfig (memory+CPU axes,
+fcfs placement) must be bit-identical to the pre-redesign scalar
+controller — golden values captured at commit 36fe58d, fixed seeds.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (MoEPredictor, OraclePredictor, spark_sim_suite,
+                        training_apps)
+from repro.core.experts import FAMILIES, MemoryFunction
+from repro.core.metrics import run_open_scenario, run_scenario
+from repro.core.simulator import (OraclePolicy, OursPolicy, PairwisePolicy,
+                                  SimConfig, Simulator)
+from repro.sched import (AdmissionController, Arrival, ArrivalConfig,
+                         DemandModel, PlacementPolicy, ResourceVector,
+                         available_placements, get_placement,
+                         register_placement, single_axis)
+from repro.sched.resources import AXES
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+N_SWEEP = 20
+
+
+def _rand_vec(rng, axes=AXES, allow_empty=False) -> ResourceVector:
+    n = rng.integers(0 if allow_empty else 1, len(axes) + 1)
+    chosen = list(rng.choice(axes, size=n, replace=False))
+    return ResourceVector(**{a: float(rng.uniform(0.0, 100.0))
+                             for a in chosen})
+
+
+def _rand_fn(rng) -> MemoryFunction:
+    fam = FAMILIES[rng.integers(len(FAMILIES))]
+    return MemoryFunction(fam, float(rng.uniform(2.0, 60.0)),
+                          float(rng.uniform(0.02, 0.8)))
+
+
+# --- ResourceVector algebra ------------------------------------------------
+
+def check_vector_algebra(seed):
+    rng = np.random.default_rng(seed)
+    u, v = _rand_vec(rng), _rand_vec(rng)
+    w = u + v
+    assert u + v == v + u                       # commutative
+    for a in set(u.axes) | set(v.axes):
+        assert w.get(a) == pytest.approx(u.get(a) + v.get(a))
+    back = w - v
+    for a in u.axes:                            # (u+v)-v recovers u
+        assert back.get(a) == pytest.approx(u.get(a))
+    k = float(rng.uniform(0.1, 3.0))
+    for a in u.axes:
+        assert (u * k).get(a) == pytest.approx(u.get(a) * k)
+    # fits is reflexive and monotone under headroom
+    assert u.fits(u)
+    assert u.fits(u + v)                        # more budget still fits
+    head = (u + v).headroom(u)
+    for a in (u + v).axes:
+        assert head.get(a) == pytest.approx((u + v).get(a) - u.get(a))
+
+
+@pytest.mark.parametrize("seed", range(N_SWEEP))
+def test_vector_algebra_sweep(seed):
+    check_vector_algebra(seed)
+
+
+def test_vector_rejects_unknown_axis():
+    with pytest.raises(ValueError):
+        ResourceVector(flux_capacitor=1.0)
+    with pytest.raises(ValueError):
+        DemandModel({"flux": MemoryFunction("affine", 0.0, 1.0)})
+
+
+def test_vector_axis_presence_semantics():
+    demand = ResourceVector(host_ram=8.0, cpu=0.5)
+    # an axis the budget does not carry is unconstrained...
+    assert demand.fits(ResourceVector(host_ram=10.0))
+    # ...but a present axis with too little capacity rejects
+    assert not demand.fits(ResourceVector(host_ram=10.0, cpu=0.4))
+    assert demand.fits(ResourceVector(host_ram=10.0, cpu=0.5))
+
+
+def test_vector_immutable():
+    v = ResourceVector(cpu=1.0)
+    with pytest.raises(AttributeError):
+        v.cpu = 2.0
+
+
+# --- binding-axis admission ------------------------------------------------
+
+def check_scalar_shim_equals_single_axis(seed):
+    """admit(fn, budget_gb) === admit(single-axis DemandModel, single-
+    axis vector): bit-identical units/booking on random curves."""
+    rng = np.random.default_rng(seed)
+    ctrl = AdmissionController()
+    fn = _rand_fn(rng)
+    budget = float(rng.uniform(1.0, 64.0))
+    cap = float(rng.uniform(1.0, 50.0))
+    s = ctrl.admit(fn, budget, cap=cap)
+    v = ctrl.admit(DemandModel.scalar(fn), single_axis("host_ram", budget),
+                   cap=cap)
+    assert s.units == v.units
+    assert s.mem_gb == v.mem_gb
+    assert s.budget_gb == v.budget_gb
+
+
+@pytest.mark.parametrize("seed", range(N_SWEEP))
+def test_scalar_shim_equals_single_axis_sweep(seed):
+    check_scalar_shim_equals_single_axis(seed)
+
+
+def check_admission_monotone_per_axis(seed):
+    """Admitted units are monotone non-decreasing in EVERY budget axis."""
+    rng = np.random.default_rng(seed)
+    ctrl = AdmissionController()
+    dm = DemandModel(
+        {"host_ram": _rand_fn(rng),
+         "hbm": MemoryFunction("affine", float(rng.uniform(0.0, 4.0)),
+                               float(rng.uniform(0.05, 2.0)))},
+        fixed={"cpu": float(rng.uniform(0.1, 0.9))})
+    base = ResourceVector(host_ram=float(rng.uniform(4.0, 40.0)),
+                          hbm=float(rng.uniform(4.0, 40.0)),
+                          cpu=1.0)
+    u0 = ctrl.admit(dm, base, cap=1e6).units
+    for axis in base.axes:
+        bigger = base + single_axis(axis, float(rng.uniform(0.5, 30.0)))
+        u1 = ctrl.admit(dm, bigger, cap=1e6).units
+        assert u1 >= u0 - 1e-9, (axis, u0, u1)
+
+
+@pytest.mark.parametrize("seed", range(N_SWEEP))
+def test_admission_monotone_per_axis_sweep(seed):
+    check_admission_monotone_per_axis(seed)
+
+
+def test_binding_axis_reported():
+    ctrl = AdmissionController()
+    dm = DemandModel({"host_ram": MemoryFunction("affine", 0.0, 1.0),
+                      "hbm": MemoryFunction("affine", 0.0, 2.0)})
+    # hbm runs out first: inverse 10/2=5 vs 20/1=20
+    dec = ctrl.admit(dm, ResourceVector(host_ram=20.0, hbm=10.0))
+    assert dec.units == pytest.approx(5.0)
+    assert dec.binding_axis == "hbm"
+    # the caller's cap binding is reported as None
+    dec = ctrl.admit(dm, ResourceVector(host_ram=20.0, hbm=10.0), cap=2.0)
+    assert dec.units == pytest.approx(2.0)
+    assert dec.binding_axis is None
+    # a fixed demand exceeding its axis gates to zero units
+    gated = DemandModel({"host_ram": MemoryFunction("affine", 0.0, 1.0)},
+                        fixed={"cpu": 0.8})
+    dec = ctrl.admit(gated, ResourceVector(host_ram=20.0, cpu=0.5))
+    assert dec.units == 0.0 and dec.binding_axis == "cpu"
+    # booking never exceeds any budgeted axis
+    dec = ctrl.admit(dm, ResourceVector(host_ram=20.0, hbm=10.0))
+    for a in dec.booked.axes:
+        assert dec.booked.get(a) <= dec.budget.get(a, np.inf) + 1e-9
+
+
+def test_effective_budget_shades_memory_axes_only():
+    ctrl = AdmissionController()
+    free = ResourceVector(host_ram=64.0, hbm=32.0, cpu=1.0, net=10.0)
+    shaded = ctrl.effective_budget(free, safety_margin=0.25,
+                                   conservative=True)
+    # memory axes shaded exactly like the scalar path...
+    assert shaded["host_ram"] == ctrl.effective_budget(
+        64.0, safety_margin=0.25, conservative=True)
+    assert shaded["hbm"] == ctrl.effective_budget(
+        32.0, safety_margin=0.25, conservative=True)
+    # ...average-rate axes untouched
+    assert shaded["cpu"] == 1.0 and shaded["net"] == 10.0
+
+
+def test_demand_model_demand_and_fixed_share_axis():
+    dm = DemandModel({"host_ram": MemoryFunction("affine", 1.0, 2.0)},
+                     fixed={"host_ram": 3.0, "cpu": 0.5})
+    d = dm.demand(2.0)
+    assert d["host_ram"] == pytest.approx(1.0 + 2.0 * 2.0 + 3.0)
+    assert d["cpu"] == pytest.approx(0.5)
+    # the fixed overhead shrinks the curve's budget on the shared axis
+    units, axis = dm.inverse(ResourceVector(host_ram=8.0, cpu=1.0))
+    assert units == pytest.approx((8.0 - 3.0 - 1.0) / 2.0)
+    assert axis == "host_ram"
+
+
+# --- hypothesis drivers (optional) ----------------------------------------
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_hyp_vector_algebra(seed):
+        check_vector_algebra(seed)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_hyp_scalar_shim(seed):
+        check_scalar_shim_equals_single_axis(seed)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_hyp_admission_monotone(seed):
+        check_admission_monotone_per_axis(seed)
+
+
+# --- placement registry ----------------------------------------------------
+
+class _J:
+    def __init__(self, jid, c_iso, arrival=0.0, unassigned=None,
+                 items=None):
+        self.jid, self.c_iso, self.arrival = jid, c_iso, arrival
+        self.items = items if items is not None else c_iso
+        self.unassigned = unassigned if unassigned is not None \
+            else self.items
+
+
+class _H:
+    def __init__(self, hid, free):
+        self.hid, self._free = hid, free
+
+    def free_vector(self):
+        return ResourceVector(host_ram=self._free)
+
+
+def test_registry_round_trip_every_policy():
+    assert set(available_placements()) >= {"fcfs", "sjf", "best-fit",
+                                           "arrival-aware"}
+    for name in available_placements():
+        pol = get_placement(name)
+        assert isinstance(pol, PlacementPolicy)
+        assert pol.name == name
+        # ordering hooks are permutations of the input
+        jobs = [_J(i, c_iso=10.0 - i, arrival=float(i))
+                for i in range(5)]
+        hosts = [_H(i, free=float((i * 3) % 7)) for i in range(5)]
+        oj = pol.order_jobs(jobs, now=100.0)
+        oh = pol.order_hosts(jobs[0], hosts)
+        assert sorted(j.jid for j in oj) == [0, 1, 2, 3, 4]
+        assert sorted(h.hid for h in oh) == [0, 1, 2, 3, 4]
+    with pytest.raises(KeyError):
+        get_placement("no-such-policy")
+
+
+def test_placement_orderings():
+    jobs = [_J(0, c_iso=8.0, arrival=0.0),
+            _J(1, c_iso=2.0, arrival=5.0),
+            _J(2, c_iso=4.0, arrival=9.0)]
+    hosts = [_H(0, 5.0), _H(1, 1.0), _H(2, 3.0)]
+    assert [j.jid for j in get_placement("fcfs").order_jobs(jobs)] \
+        == [0, 1, 2]
+    assert [h.hid for h in get_placement("fcfs").order_hosts(None, hosts)] \
+        == [0, 1, 2]
+    # sjf: remaining isolated time ascending (2.0, 4.0, 8.0)
+    assert [j.jid for j in get_placement("sjf").order_jobs(jobs)] \
+        == [1, 2, 0]
+    # best-fit: tightest host first
+    assert [h.hid for h in
+            get_placement("best-fit").order_hosts(None, hosts)] \
+        == [1, 2, 0]
+    # arrival-aware at t=10: urgency (10-a)/c_iso = 1.25, 2.5, 0.25
+    assert [j.jid for j in
+            get_placement("arrival-aware").order_jobs(jobs, now=10.0)] \
+        == [1, 0, 2]
+
+
+def test_register_placement_extension_point():
+    @register_placement("_test-reverse")
+    class _Rev(PlacementPolicy):
+        def order_jobs(self, jobs, now=0.0):
+            return list(jobs)[::-1]
+    try:
+        assert "_test-reverse" in available_placements()
+        jobs = [_J(i, 1.0) for i in range(3)]
+        assert [j.jid for j in
+                get_placement("_test-reverse").order_jobs(jobs)] \
+            == [2, 1, 0]
+    finally:
+        from repro.sched.placement import _REGISTRY
+        _REGISTRY.pop("_test-reverse", None)
+
+
+# --- end-to-end: placements drive the simulator, shim stays bit-exact ------
+
+@pytest.fixture(scope="module")
+def suite():
+    apps = spark_sim_suite()
+    moe = MoEPredictor().fit(training_apps(apps))
+    return apps, moe
+
+
+def test_every_placement_runs_and_conserves(suite):
+    """Each registered policy drives a full open-arrival run to
+    completion (work conservation holds; only ordering differs)."""
+    apps, moe = suite
+    from repro.sched import poisson_arrivals
+    arrivals = poisson_arrivals(
+        apps, ArrivalConfig(rate_per_s=0.05, n_jobs=10), seed=3)
+    stps = {}
+    for name in ("fcfs", "sjf", "best-fit", "arrival-aware"):
+        cfg = SimConfig(n_hosts=6, placement=name)
+        sim = Simulator(None, OursPolicy(moe), cfg, seed=3,
+                        arrivals=arrivals)
+        out = sim.run()
+        for j in sim.jobs:
+            assert j.finish is not None
+            assert j.done == pytest.approx(j.items, rel=1e-6)
+        stps[name] = out["stp"]
+    assert stps["fcfs"] > 0
+
+
+def test_policy_placement_override_beats_cfg(suite):
+    apps, moe = suite
+    jobs = [(apps[i], 30.0) for i in (0, 5, 11, 17)]
+    cfg = SimConfig(n_hosts=4, placement="fcfs")
+    r_cfg_sjf = Simulator(
+        jobs, OursPolicy(moe), SimConfig(n_hosts=4, placement="sjf"),
+        seed=1).run()
+    r_override = Simulator(
+        jobs, OursPolicy(moe, placement="sjf"), cfg, seed=1).run()
+    assert r_override["stp"] == r_cfg_sjf["stp"]
+    assert r_override["antt"] == r_cfg_sjf["antt"]
+
+
+# --- multi-axis scenario: a non-primary axis binds -------------------------
+
+def test_secondary_axis_binds_admission(suite):
+    """HBM-primary hosts with a small host-staging-RAM axis: admission
+    must be bound by host_ram for some placements, and booked host_ram
+    must never exceed its capacity."""
+    apps, moe = suite
+    from dataclasses import replace
+    # slope chosen so one chunk's staging (~4.3 GB) fits the 8 GB axis
+    # but a second co-located executor is bound by what's left
+    staged = [replace(a, aux_demand={"host_ram": MemoryFunction(
+        "affine", 0.1, 0.1)}) for a in apps]
+    cfg = SimConfig(n_hosts=6, host_mem_gb=4096.0, min_alloc_gb=4.0,
+                    primary_axis="hbm", extra_capacity={"host_ram": 8.0})
+    sim = Simulator([(staged[i], 1000.0) for i in (0, 3, 7, 11)],
+                    OursPolicy(moe), cfg, seed=2)
+    spawned = []
+    orig = sim._spawn
+
+    def spy(job, host, items, mt, mc, delay=0.0):
+        e = orig(job, host, items, mt, mc, delay)
+        spawned.append(e)
+        used = sum(x.claimed_vec.get("host_ram", 0.0)
+                   for x in host.execs)
+        assert used <= 8.0 + 1e-6
+        return e
+
+    sim._spawn = spy
+    out = sim.run()
+    assert spawned
+    assert out["binding_axes"].get("host_ram", 0) > 0
+
+
+def test_empty_host_override_respects_cpu_gate(suite):
+    """The empty-host chunk override relaxes only the PRIMARY memory
+    axis: a job whose CPU load exceeds the host slack must never spawn,
+    even on an idle host (the pre-redesign dispatcher semantics)."""
+    apps, moe = suite
+    from dataclasses import replace
+    hungry = [replace(a, cpu_load=0.9) for a in apps[:4]]
+    cfg = SimConfig(n_hosts=4, cpu_slack=0.5, max_sim_time=1e5)
+    sim = Simulator([(h, 30.0) for h in hungry], OursPolicy(moe), cfg,
+                    seed=0)
+    spawned = []
+    orig = sim._spawn
+    sim._spawn = lambda *a, **k: spawned.append(a) or orig(*a, **k)
+    out = sim.run()
+    assert not spawned                      # gate held on every host
+    assert "cpu" not in out["binding_axes"]
+    assert out["unfinished"] == 4
+
+
+def test_empty_host_override_respects_secondary_axis(suite):
+    """A bound secondary axis (no overrun consequence model) must not be
+    overridden by the empty-host chunk floor: bookings stay within the
+    axis capacity even when every placement opens an idle host."""
+    apps, moe = suite
+    from dataclasses import replace
+    # staging at chunk scale (~41.7 items -> ~21 GB) dwarfs the 8 GB
+    # axis; admission must shrink the split instead of forcing a chunk
+    staged = [replace(a, aux_demand={"host_ram": MemoryFunction(
+        "affine", 0.1, 0.5)}) for a in apps]
+    cfg = SimConfig(n_hosts=6, host_mem_gb=4096.0, min_alloc_gb=4.0,
+                    primary_axis="hbm", extra_capacity={"host_ram": 8.0},
+                    max_sim_time=1e7)
+    sim = Simulator([(staged[i], 1000.0) for i in (0, 3, 7)],
+                    OursPolicy(moe), cfg, seed=2)
+    spawned = []
+    orig = sim._spawn
+
+    def spy(job, host, items, mt, mc, delay=0.0):
+        e = orig(job, host, items, mt, mc, delay)
+        spawned.append(e)
+        used = sum(x.claimed_vec.get("host_ram", 0.0)
+                   for x in host.execs)
+        assert used <= 8.0 + 1e-6, used
+        return e
+
+    sim._spawn = spy
+    out = sim.run()
+    assert spawned                        # the axis shrank, not starved
+    assert out["binding_axes"].get("host_ram", 0) > 0
+
+
+def test_admit_batch_reports_forced_axes():
+    """The forced flag names the violated axes — a host_ram-forced
+    admission must not be misreported as an hbm overrun."""
+    ctrl = AdmissionController()
+    dm = DemandModel({"hbm": MemoryFunction("affine", 0.0, 5.0),
+                      "host_ram": MemoryFunction("affine", 0.0, 1.0)},
+                     primary_axis="hbm")
+    dec = ctrl.admit_batch(
+        dm, ResourceVector(hbm=10.0, host_ram=0.5), min_batch=1)
+    assert dec.units == 1 and dec.info["forced"]
+    assert dec.info["forced_axes"] == ["host_ram"]   # hbm (5<=10) fits
+    assert dec.info["demand"]["host_ram"] == pytest.approx(1.0)
+    ok = ctrl.admit_batch(dm, ResourceVector(hbm=10.0, host_ram=2.0))
+    assert not ok.info["forced"] and ok.info["forced_axes"] == []
+
+
+def test_cpu_gate_moved_into_controller(suite):
+    """A host whose CPU slack is exhausted must admit nothing even with
+    plenty of free memory — the gate now lives in the DemandModel's
+    fixed cpu axis, not the dispatcher."""
+    apps, moe = suite
+    ctrl = AdmissionController()
+    fn = MemoryFunction("affine", 0.0, 1.0)
+    dm = DemandModel({"host_ram": fn}, fixed={"cpu": 0.6})
+    ok = ctrl.admit(dm, ResourceVector(host_ram=32.0, cpu=0.7))
+    assert ok.units > 0
+    gated = ctrl.admit(dm, ResourceVector(host_ram=32.0, cpu=0.5))
+    assert gated.units == 0.0 and gated.binding_axis == "cpu"
+
+
+# --- golden back-compat pins (pre-redesign scalar controller) --------------
+
+GOLDEN_CLOSED = {   # run_scenario(n_jobs=9, n_mixes=3, n_hosts=12, seed=7)
+    "ours": (5.767868544931616, 2.71079337041143,
+             -0.3074459529260183, 0),
+    "oracle": (6.3699925720923645, 1.8950316893180805,
+               0.40447242501767683, 0),
+    "pairwise": (2.9885133539911806, 273.59043173481683,
+                 -0.03958673182490006, 101),
+}
+GOLDEN_OPEN = {     # run_open_scenario(rate=0.05, n_jobs=12, n_hosts=8,
+    "ours": (8.603874583612448, 4.06171787327101, 0),      # 2 streams,
+    "oracle": (8.689598499339828, 3.9819882349936964, 0),  # seed=5)
+    "pairwise": (3.4465593523468114, 127.74640323642231, 27),
+}
+
+
+def _factories(moe):
+    return {
+        "ours": lambda m: OursPolicy(moe),
+        "oracle": lambda m: OraclePolicy(OraclePredictor()),
+        "pairwise": lambda m: PairwisePolicy(),
+    }
+
+
+def test_scalar_shim_closed_results_bit_identical(suite):
+    apps, moe = suite
+    for name, factory in _factories(moe).items():
+        r = run_scenario(apps, factory, n_jobs=9, n_mixes=3,
+                         cfg=SimConfig(n_hosts=12), seed=7)
+        stp, antt, red, oom = GOLDEN_CLOSED[name]
+        assert r.stp_gmean == stp, name
+        assert r.antt_gmean == antt, name
+        assert r.antt_reduction_mean == red, name
+        assert r.oom_total == oom, name
+        # the default config's only resource binder is primary memory
+        assert set(r.binding_axes) <= {"host_ram", "cap"}, name
+
+
+def test_scalar_shim_open_results_bit_identical(suite):
+    apps, moe = suite
+    acfg = ArrivalConfig(rate_per_s=0.05, n_jobs=12)
+    for name, factory in _factories(moe).items():
+        r = run_open_scenario(apps, factory, acfg, n_streams=2,
+                              cfg=SimConfig(n_hosts=8), seed=5)
+        stp, antt, oom = GOLDEN_OPEN[name]
+        assert r["stp_gmean"] == stp, name
+        assert r["antt_gmean"] == antt, name
+        assert r["oom_total"] == oom, name

@@ -97,13 +97,20 @@ def test_admission_floor_and_cap():
 def test_admit_batch_serving_semantics():
     ctrl = AdmissionController()
     fn = MemoryFunction("affine", 1.0, 0.5)   # weights + per-request GB
-    assert ctrl.admit_batch(fn, 5.0) == 8
-    assert ctrl.admit_batch(fn, 5.0, max_batch=3) == 3
-    # a model that barely fits still serves one request at a time
-    assert ctrl.admit_batch(fn, 0.1) == 1
+    assert ctrl.admit_batch(fn, 5.0).units == 8
+    assert ctrl.admit_batch(fn, 5.0, max_batch=3).units == 3
+    # a model that barely fits still serves one request at a time —
+    # and the within-budget case is NOT flagged forced
+    assert not ctrl.admit_batch(fn, 5.0).info["forced"]
+    dec = ctrl.admit_batch(fn, 0.1)
+    assert dec.units == 1
+    # fn(1) = 1.5 GB > 0.1 GB budget: forced progress is observable,
+    # not silent (the serving driver logs it)
+    assert dec.info["forced"]
+    assert dec.mem_gb <= 0.1 + 1e-9   # booking still clamps to budget
     # saturating curve under a generous budget -> bounded by max_batch
     sat = MemoryFunction("exp_saturation", 2.0, 1.0)
-    assert ctrl.admit_batch(sat, 10.0, max_batch=64) == 64
+    assert ctrl.admit_batch(sat, 10.0, max_batch=64).units == 64
     # ...and REQUIRES a bound: unbounded admission must not silently
     # return a huge batch
     with pytest.raises(ValueError):
@@ -350,6 +357,71 @@ def test_partial_update_requires_fit():
     with pytest.raises(RuntimeError):
         MoEPredictor().partial_update(np.zeros(len(FEATURE_NAMES)),
                                       "affine")
+
+
+def test_partial_update_dedupes_near_twin_rows(suite):
+    """A row within dedupe_tol of an existing SAME-family row adds no
+    information: it must be dropped (returns False) instead of growing
+    the KNN table without bound."""
+    apps, _ = suite
+    moe = MoEPredictor().fit(training_apps(apps))
+    n0 = len(moe._X_raw)
+    feat = _novel_app(seed=1).features
+    assert moe.partial_update(feat, "affine") is True
+    # the EXACT same features again -> duplicate, table unchanged
+    assert moe.partial_update(feat, "affine") is False
+    # a near-twin (same tight cluster) -> still a duplicate
+    twin = _novel_app(seed=2).features
+    assert moe.partial_update(twin, "affine") is False
+    assert len(moe._X_raw) == n0 + 1
+    assert moe.n_online_rows == 1
+    # same features but a DIFFERENT family is new information, kept
+    assert moe.partial_update(twin, "log") is True
+    assert len(moe._X_raw) == n0 + 2
+
+
+def test_partial_update_evicts_oldest_online_row(suite):
+    """Beyond max_online_rows the oldest ONLINE row is evicted; offline
+    training rows are never touched."""
+    apps, _ = suite
+    moe = MoEPredictor().fit(training_apps(apps))
+    moe.max_online_rows = 2
+    n_fit = moe._n_fit
+    f1 = _novel_app(seed=1, shift=2.0, cluster_seed=42).features
+    f2 = _novel_app(seed=1, shift=4.0, cluster_seed=43).features
+    f3 = _novel_app(seed=1, shift=6.0, cluster_seed=44).features
+    assert moe.partial_update(f1, "affine")
+    assert moe.partial_update(f2, "affine")
+    assert moe.partial_update(f3, "affine")        # evicts f1
+    assert moe.n_online_rows == 2
+    # max_online_rows=0 disables online rows (reject, don't evict)
+    frozen = MoEPredictor(max_online_rows=0).fit(training_apps(apps))
+    assert frozen.partial_update(f1, "affine") is False
+    assert frozen.n_online_rows == 0
+    assert len(moe._X_raw) == n_fit + 2 == len(moe.knn.X)
+    # f1's row is gone, f2/f3 remain
+    assert not any(np.allclose(row, f1) for row in moe._X_raw)
+    assert any(np.allclose(row, f2) for row in moe._X_raw)
+    assert any(np.allclose(row, f3) for row in moe._X_raw)
+    # training rows intact
+    assert moe._n_fit == n_fit
+    for a in training_apps(apps):
+        assert any(np.allclose(row, a.features) for row in moe._X_raw)
+
+
+def test_refresher_counts_dedupe_as_rejection(suite):
+    """OnlineRefresher with confidence gating off: the predictor-level
+    dedupe is the second line of defense against table bloat."""
+    apps, _ = suite
+    moe = MoEPredictor().fit(training_apps(apps))
+    ref = OnlineRefresher(moe, only_unconfident=False)
+    novel = _novel_app(seed=1)
+    xs = np.asarray([1.0, 50.0, 100.0])
+    ys = np.asarray(novel.true_fn(xs))
+    assert ref.observe(novel.features, xs, ys) == "affine"
+    assert ref.observe(novel.features, xs, ys) is None
+    assert ref.stats() == {"accepted": 1, "rejected": 1, "table_full": 0}
+    assert moe.n_online_rows == 1
 
 
 def test_partial_update_keeps_second_novel_cluster_unconfident(suite):

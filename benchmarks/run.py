@@ -35,6 +35,7 @@ BENCHES = [
     "kernel_bench",        # kernel wrappers (interpret-mode) + XLA refs
     "tpu_colocation",      # beyond-paper: TPU-jobs universe
     "open_arrivals",       # beyond-paper: Poisson stream, windowed STP
+    "serving_bench",       # beyond-paper: continuous vs wave serving
 ]
 
 

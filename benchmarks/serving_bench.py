@@ -1,0 +1,124 @@
+"""Continuous-batching vs wave serving sweep (beyond paper): the paper's
+budget-inverse admission applied per DECODE STEP instead of per wave,
+over arrival rate x HBM budget x placement policy.
+
+Both modes share the request population, demand model, budget vector and
+(virtual-time) execution cost model — the only difference is when
+admission runs.  Reported per cell:
+
+* goodput (completed requests' tokens per second) for both modes and
+  the continuous/wave ratio — the serving analogue of the paper's STP
+  gain from co-location,
+* TTFT mean / p95 and preemption rate for continuous mode,
+* the per-step binding-axis histogram (hbm vs host_ram).
+
+    PYTHONPATH=src python -m benchmarks.run --bench serving_bench
+    PYTHONPATH=src python -m benchmarks.run --smoke --bench serving_bench
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import SMOKE, emit, save_result
+
+# arrival rate (requests/s of virtual time), HBM budget as a multiple of
+# one full-context request's KV (weights excluded), placement policies
+RATES_PER_S = (40.0,) if SMOKE else (10.0, 40.0, 160.0)
+BUDGET_KV_MULT = (3.0,) if SMOKE else (1.5, 3.0, 8.0)
+PLACEMENTS = ("fcfs", "sjf") if SMOKE \
+    else ("fcfs", "sjf", "arrival-aware")
+N_REQUESTS = 24 if SMOKE else 96
+MAX_NEW = 32
+PROMPT_LEN = 24
+WEIGHTS_GB = 0.5
+KV_GB_PER_TOKEN = 2e-4
+HOST_RAM_PER_REQ_GB = 0.01
+SEED = 7
+
+
+def _requests(n: int, rate: float, seed: int):
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    t = np.cumsum(gaps)
+    return [Request(rid=i,
+                    prompt_len=int(rng.integers(PROMPT_LEN // 2,
+                                                PROMPT_LEN + 1)),
+                    max_new_tokens=int(rng.integers(MAX_NEW // 4,
+                                                    MAX_NEW + 1)),
+                    arrival=float(t[i]))
+            for i in range(n)]
+
+
+def _run(mode: str, rate: float, kv_mult: float, placement: str):
+    from repro.sched.resources import ResourceVector
+    from repro.serve import Engine, ServingDemand, SimBackend
+
+    full_ctx = PROMPT_LEN + MAX_NEW
+    demand = ServingDemand(
+        weights_gb=WEIGHTS_GB, kv_gb_per_token=KV_GB_PER_TOKEN,
+        host_ram_per_req_gb=HOST_RAM_PER_REQ_GB)
+    budget = ResourceVector(
+        hbm=WEIGHTS_GB + KV_GB_PER_TOKEN * full_ctx * kv_mult,
+        host_ram=HOST_RAM_PER_REQ_GB * max(2.0 * kv_mult, 2.0))
+    engine = Engine(_requests(N_REQUESTS, rate, SEED), demand, budget,
+                    SimBackend(), mode=mode, placement=placement,
+                    max_batch=32)
+    summary = engine.run()
+    # the acceptance invariant, enforced here too: no unforced
+    # over-budget step anywhere in the sweep
+    for dec in engine.metrics.steps:
+        assert dec.booked.fits(dec.budget) or dec.forced, (
+            f"unforced over-budget step in {mode} sweep: {dec}")
+    return summary
+
+
+def main() -> dict:
+    payload: dict = {"cells": []}
+    worst = np.inf
+    for rate in RATES_PER_S:
+        for mult in BUDGET_KV_MULT:
+            for pl in PLACEMENTS:
+                cont = _run("continuous", rate, mult, pl)
+                wave = _run("wave", rate, mult, pl)
+                ratio = cont["goodput_tok_s"] \
+                    / max(wave["goodput_tok_s"], 1e-12)
+                worst = min(worst, ratio)
+                cell = f"serving/{rate}/{mult}/{pl}"
+                emit(f"{cell}/goodput_continuous",
+                     f"{cont['goodput_tok_s']:.1f}", "tok/s")
+                emit(f"{cell}/goodput_wave",
+                     f"{wave['goodput_tok_s']:.1f}", "tok/s")
+                emit(f"{cell}/goodput_ratio", f"{ratio:.3f}",
+                     "continuous / wave at equal budget")
+                emit(f"{cell}/ttft_mean_ms",
+                     f"{cont['ttft_mean_s'] * 1e3:.1f}",
+                     f"p95 {cont['ttft_p95_s'] * 1e3:.1f}ms")
+                emit(f"{cell}/preemption_rate",
+                     f"{cont['preemption_rate']:.3f}",
+                     f"{cont['preemptions']} evictions")
+                axes = " ".join(
+                    f"{a}:{n}" for a, n in
+                    sorted(cont["binding_axes"].items())) or "-"
+                emit(f"{cell}/binding_axes", f"[{axes}]",
+                     "join decisions per binding axis")
+                payload["cells"].append(
+                    {"rate": rate, "kv_mult": mult, "placement": pl,
+                     "continuous": cont, "wave": wave, "ratio": ratio})
+    emit("serving/goodput_ratio_min", f"{worst:.3f}",
+         "continuous >= wave expected at every cell")
+    payload["ratio_min"] = worst
+    save_result("serving_bench", payload)
+    if worst < 0.99:
+        raise AssertionError(
+            f"continuous batching lost to wave mode somewhere in the "
+            f"sweep (min ratio {worst:.3f}) — step-level admission "
+            f"regressed")
+    return payload
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("REPRO_BENCH_SMOKE", "1")
+    main()

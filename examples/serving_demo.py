@@ -1,8 +1,13 @@
-"""Memory-aware batched serving: the paper's technique as a first-class
-serving feature. The engine calibrates a memory function for the model's
-serving footprint (weights + KV vs active requests), then uses its
-INVERSE to admit the largest request batch that fits the HBM budget —
-exactly the paper's "how many data items under a memory budget" loop.
+"""Memory-aware continuous batching: the paper's technique as a
+first-class serving feature. The engine calibrates a memory function for
+the model's serving footprint (weights + KV vs active requests), then
+uses its INVERSE — re-evaluated at EVERY decode step — to keep the
+largest request batch that fits the HBM budget: new prefills join as
+soon as their KV fits, finished requests free their slots immediately,
+and over-budget KV growth evicts the lowest-priority request (requeued,
+recomputed later).  Exactly the paper's "how many data items under a
+memory budget" loop, asked once per decode step instead of once per
+wave.
 
     PYTHONPATH=src python examples/serving_demo.py --requests 12
 """
@@ -10,85 +15,64 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.models import model
-from repro.sched import AdmissionController
-from repro.utils.tree import tree_bytes
-
-
-def measured_footprint_gb(cfg, batch: int, max_len: int) -> float:
-    """'Profiling run': weights + allocated KV cache for ``batch`` slots."""
-    w = tree_bytes(model.abstract(cfg))
-    cache = model.init_cache(cfg, batch, max_len, abstract_only=True)
-    return (w + tree_bytes(cache)) / 2 ** 30
+from repro.sched import DemandModel, ResourceVector
+from repro.serve import Engine, JaxBackend, Request, ServingDemand
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--budget-gb", type=float, default=0.35)
-    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--budget-gb", type=float, default=0.0004)
+    ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--decode-steps", type=int, default=8)
+    ap.add_argument("--mode", default="continuous",
+                    choices=("continuous", "wave"))
     args = ap.parse_args()
 
     cfg = get_config("qwen3-0.6b", smoke=True)
-    params = model.init(cfg, jax.random.key(0))
 
     # --- the paper's runtime path, applied to serving capacity ---------
-    # two-point calibration of footprint-vs-batch (the affine expert: the
-    # library extension DESIGN.md §4 motivates)
-    ctrl = AdmissionController()
-    x1, x2 = 2, 4
-    y1 = measured_footprint_gb(cfg, x1, args.max_len)
-    y2 = measured_footprint_gb(cfg, x2, args.max_len)
-    fn = ctrl.calibrate("affine", [(x1, y1), (x2, y2)])
-    dec = ctrl.admit_batch(fn, args.budget_gb)
-    admit = int(dec.units)
+    # two-point calibration of footprint-vs-batch (cached per
+    # (config, max_len) key — a second construction reuses the fit)
+    dm = DemandModel.from_model_config(cfg, args.max_len)
+    fn = dm.primary_fn
+    demand = ServingDemand.from_demand_model(dm, args.max_len)
     print(f"footprint(batch) ~= {fn.m:.4f} + {fn.b:.5f} GB/slot "
-          f"(calibrated at batch {x1},{x2})")
-    print(f"HBM budget {args.budget_gb} GB -> admit {admit} "
-          f"concurrent requests")
-    if dec.info["forced"]:
-        # admit_batch keeps a server making progress (min_batch=1) even
-        # when the weights alone exceed the budget — the decision says so
-        print(f"note: forced admission — minimum batch exceeds the "
-              f"budget (footprint(1) = {float(fn(1)):.4f} GB); "
-              f"serving anyway")
-    true_at_admit = measured_footprint_gb(cfg, admit, args.max_len)
-    print(f"true footprint at admitted batch: {true_at_admit:.4f} GB "
-          f"(err {abs(true_at_admit - float(fn(admit)))/true_at_admit*100:.2f}%)")
+          f"(calibrated at batch 2,4) -> {demand.kv_gb_per_token * 2**20:.2f} "
+          f"KiB KV per token per request")
+    whole = int(fn.inverse(args.budget_gb))
+    print(f"HBM budget {args.budget_gb} GB -> {whole} full-length "
+          f"requests fit; continuous mode packs more by admitting "
+          f"against LIVE context lengths")
 
-    # --- serve the queue in admitted waves ------------------------------
+    # --- serve an open queue through the engine -------------------------
     rng = np.random.default_rng(0)
-    queue = [rng.integers(3, cfg.vocab_size, size=rng.integers(8, 24))
-             for _ in range(args.requests)]
-    done = 0
-    wave = 0
-    while queue:
-        batch_reqs, queue = queue[:admit], queue[admit:]
-        B = len(batch_reqs)
-        L = max(len(r) for r in batch_reqs)
-        toks = np.zeros((B, L), np.int32)
-        for i, r in enumerate(batch_reqs):
-            toks[i, L - len(r):] = r  # left-pad
-        last, cache = model.prefill(params, cfg,
-                                    {"tokens": jnp.asarray(toks)},
-                                    max_len=args.max_len)
-        out = [jnp.argmax(last, -1).astype(jnp.int32)]
-        for _ in range(args.decode_steps - 1):
-            lg, cache = model.decode_step(params, cfg, cache, out[-1])
-            out.append(jnp.argmax(lg, -1).astype(jnp.int32))
-        gen = jnp.concatenate(out, axis=1)
-        done += B
-        wave += 1
-        print(f"wave {wave}: served {B} requests "
-              f"(prefill {L} tokens, decoded {gen.shape[1]}); "
-              f"sample continuation: {np.asarray(gen[0])[:6].tolist()}")
-    print(f"served {done} requests in {wave} memory-budgeted waves")
+    reqs = [Request(rid=i,
+                    prompt_len=int(rng.integers(8, 24)),
+                    max_new_tokens=int(rng.integers(
+                        max(args.decode_steps // 2, 1),
+                        args.decode_steps + 1)),
+                    arrival=0.0)
+            for i in range(args.requests)]
+    engine = Engine(reqs, demand, ResourceVector(hbm=args.budget_gb),
+                    JaxBackend(cfg, max_len=args.max_len),
+                    mode=args.mode, max_batch=16)
+    summary = engine.run()
+    print(engine.metrics.format_summary(summary))
+    if summary["forced_steps"]:
+        # the engine keeps making progress (min batch 1) even when the
+        # weights alone exceed the budget — the decision says so
+        print(f"note: {summary['forced_steps']} forced step(s) — a "
+              f"single request exceeds the budget; serving anyway")
+    joins = sum(1 for d in engine.metrics.steps if d.admitted)
+    sample = next(r for r in reqs if r.tokens)
+    print(f"served {summary['completed']} requests across "
+          f"{summary['steps']} steps ({joins} join points, "
+          f"{summary['preemptions']} preemptions); sample continuation "
+          f"rid={sample.rid}: {sample.tokens[:6]}")
 
 
 if __name__ == "__main__":

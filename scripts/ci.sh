@@ -3,7 +3,9 @@
 # regression (hypothesis import killing collection; >2 min runs) cannot
 # silently come back.  After the fast pytest selection, a tiny --smoke
 # benchmark pass exercises the bench plumbing end-to-end (including the
-# multi-axis vector-admission scenario) inside the SAME wall-clock cap.
+# multi-axis vector-admission scenario and the continuous-vs-wave
+# serving sweep, which asserts continuous >= wave goodput) inside the
+# SAME wall-clock cap.
 #
 #   scripts/ci.sh            # fast selection + smoke, <= $CI_TIMEOUT_S (120)
 #   CI_FULL=1 scripts/ci.sh  # full suite incl. @slow tier-2 (longer cap)
@@ -13,7 +15,7 @@ cd "$(dirname "$0")/.."
 
 CI_TIMEOUT_S="${CI_TIMEOUT_S:-120}"
 PYTHON="${PYTHON:-python}"
-CI_SMOKE_BENCHES="${CI_SMOKE_BENCHES-open_arrivals tpu_colocation}"
+CI_SMOKE_BENCHES="${CI_SMOKE_BENCHES-open_arrivals tpu_colocation serving_bench}"
 START_S=$SECONDS
 
 # Deps: the image bakes in the jax/pallas toolchain; install only what's

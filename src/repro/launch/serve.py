@@ -1,20 +1,28 @@
-"""Production serving driver: prefill + decode loop with the paper's
-memory-budgeted admission (the serving-side co-location hook).
+"""Production serving driver: a thin CLI over the continuous-batching
+engine (``repro.serve``).
 
 Admission routes through ``repro.sched.AdmissionController`` — the SAME
 predict -> two-point-calibrate -> budget-inverse controller the cluster
 simulator's policies use — with requests as the work unit and the
 serving footprint on the **hbm axis** of a
-:class:`~repro.sched.resources.ResourceVector` budget.  Passing
-``--host-ram-gb`` adds a second budgeted axis (pinned host staging
-memory per request), and the admitted wave size becomes the min over
-per-axis inverses; the log reports which axis bound it.  When even a
-single request exceeds the budget the controller forces progress and
-flags the decision ``forced`` — logged here instead of booked silently.
+:class:`~repro.sched.resources.ResourceVector` budget.  The default
+``--mode continuous`` re-decides admission **every decode step**: new
+prefills join the running batch when the binding-axis inverse says their
+KV fits, finished requests retire immediately, and lowest-priority
+requests are evicted-and-requeued (with recompute) when decode growth
+would breach the budget.  ``--mode wave`` keeps the pre-engine
+behaviour — one admission per wave against the worst-case footprint —
+for comparison.
 
-Queue order is pluggable via the ``repro.sched.placement`` registry
-(``--placement fcfs|sjf|best-fit|arrival-aware``): ``sjf`` serves short
-prompts first, shrinking per-wave padding.
+Passing ``--host-ram-gb`` adds a second budgeted axis (pinned host
+staging memory per request); the metrics report which axis bound each
+join.  Forced over-budget progress (a single request that does not fit)
+is flagged on the decision and logged, never booked silently.
+
+Queue order and preemption priority are pluggable via the
+``repro.sched.placement`` registry (``--placement
+fcfs|sjf|best-fit|arrival-aware``): ``sjf`` serves short requests first,
+shrinking padding and mean TTFT.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 8 --decode-steps 16
@@ -23,74 +31,37 @@ from __future__ import annotations
 
 import argparse
 import time
-from dataclasses import dataclass
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.models import model as model_lib
-from repro.sched import (AdmissionController, AdmissionDecision,
-                         DemandModel, ResourceVector, available_placements,
-                         get_placement)
-from repro.core.experts import MemoryFunction
-from repro.train.step import build_decode_step, build_prefill_step
-from repro.utils.tree import tree_bytes
+from repro.sched import DemandModel, ResourceVector, available_placements
+from repro.serve import Engine, JaxBackend, Request, ServingDemand
 
 
-def admission_batch(cfg, max_len: int, budget_gb: float,
-                    controller: AdmissionController = None,
-                    host_ram_gb: float = 0.0,
-                    host_ram_per_req_gb: float = 0.0
-                    ) -> AdmissionDecision:
-    """Paper-style: calibrate footprint(batch) at two small batches, admit
-    via the binding-axis inverse under an HBM (+ optional host RAM)
-    budget vector."""
-    controller = controller or AdmissionController()
-
-    def fp(b):
-        w = tree_bytes(model_lib.abstract(cfg))
-        c = model_lib.init_cache(cfg, b, max_len, abstract_only=True)
-        return (w + tree_bytes(c)) / 2 ** 30
-    fn = controller.calibrate("affine", [(2, fp(2)), (4, fp(4))])
-    curves = {"hbm": fn}
-    budget_axes = {"hbm": float(budget_gb)}
-    if host_ram_gb > 0.0:
-        # pinned host staging per in-flight request (I/O buffers, token
-        # queues) — a second budgeted axis that can bind before HBM
-        curves["host_ram"] = MemoryFunction(
-            "affine", 0.0, float(host_ram_per_req_gb))
-        budget_axes["host_ram"] = float(host_ram_gb)
-    demand = DemandModel(curves, primary_axis="hbm")
-    return controller.admit_batch(demand, ResourceVector(**budget_axes),
-                                  min_batch=1)
-
-
-@dataclass
-class _Request:
-    """Duck-typed for the placement registry's ordering hooks."""
-    rid: int
-    prompt_len: int
-    arrival: float = 0.0
-
-    @property
-    def c_iso(self) -> float:
-        return float(self.prompt_len)
-
-    @property
-    def items(self) -> float:
-        return float(self.prompt_len)
-
-    @property
-    def unassigned(self) -> float:
-        return float(self.prompt_len)
+def build_requests(args, rng: np.random.Generator):
+    """Heterogeneous prompt/decode lengths make step-level membership
+    churn real: short requests retire early (continuous mode backfills
+    their slots), long prompts dominate padding (sjf shrinks it)."""
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(max(args.prompt_len // 2, 1),
+                                args.prompt_len + 1))
+        new = int(rng.integers(max(args.decode_steps // 2, 1),
+                               args.decode_steps + 1))
+        arrival = float(i) / args.rate if args.rate > 0 else 0.0
+        reqs.append(Request(rid=i, prompt_len=plen, max_new_tokens=new,
+                            arrival=arrival))
+    return reqs
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mode", default="continuous",
+                    choices=("continuous", "wave"),
+                    help="step-level admission vs legacy per-wave")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--decode-steps", type=int, default=16)
@@ -102,71 +73,50 @@ def main():
                     help="pinned host memory per in-flight request")
     ap.add_argument("--placement", default="fcfs",
                     choices=available_placements(),
-                    help="pending-queue order (sjf = short prompts first)")
+                    help="queue order + preemption priority "
+                         "(sjf = short requests first)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="request arrival rate /s (0 = all at t=0)")
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     max_len = args.prompt_len + args.decode_steps + 1
-    dec = admission_batch(cfg, max_len, args.budget_gb,
-                          host_ram_gb=args.host_ram_gb,
-                          host_ram_per_req_gb=args.host_ram_per_req_gb)
-    admit = min(int(dec.units), args.requests)
-    axes = ", ".join(f"{a}={v:.3g}GB" for a, v in dec.budget.items())
-    print(f"admitting {admit} concurrent requests under [{axes}] "
-          f"(binding axis: {dec.binding_axis or 'request count'})")
-    if dec.info.get("forced"):
-        # admit_batch guarantees progress even when one request is over
-        # budget — observable, not silent, naming the violated axes
-        viol = "; ".join(
-            f"{a}: need {dec.info['demand'][a]:.3g} GB > "
-            f"{dec.budget[a]:.3g} GB" for a in dec.info["forced_axes"])
-        print(f"WARNING: forced admission of {int(dec.units)} "
-              f"request(s) over budget ({viol}); expect paging/"
+
+    demand_model = DemandModel.from_model_config(
+        cfg, max_len,
+        host_ram_per_req_gb=args.host_ram_per_req_gb
+        if args.host_ram_gb > 0.0 else 0.0)
+    demand = ServingDemand.from_demand_model(demand_model, max_len)
+    budget_axes = {"hbm": float(args.budget_gb)}
+    if args.host_ram_gb > 0.0:
+        budget_axes["host_ram"] = float(args.host_ram_gb)
+    budget = ResourceVector(**budget_axes)
+
+    rng = np.random.default_rng(args.seed)
+    requests = build_requests(args, rng)
+    backend = JaxBackend(cfg, max_len=max_len, seed=args.seed)
+    engine = Engine(requests, demand, budget, backend, mode=args.mode,
+                    placement=args.placement, max_batch=args.max_batch)
+
+    axes = ", ".join(f"{a}={v:.3g}GB" for a, v in budget.items())
+    print(f"serving {args.requests} requests, mode={args.mode}, "
+          f"placement={args.placement}, budget [{axes}]")
+    t0 = time.time()
+    summary = engine.run()
+    wall = time.time() - t0
+    print(engine.metrics.format_summary(summary))
+    if summary["forced_steps"]:
+        # forced progress is observable, not silent: some step ran a
+        # single request whose footprint alone exceeds the budget
+        print(f"WARNING: {summary['forced_steps']} step(s) forced over "
+              f"budget (single-request floor); expect paging/"
               f"preemption risk")
-
-    params = model_lib.init(cfg, jax.random.key(0))
-    prefill = jax.jit(build_prefill_step(cfg, max_len))
-    decode = jax.jit(build_decode_step(cfg), donate_argnums=(1,))
-
-    rng = np.random.default_rng(0)
-    # heterogeneous prompt lengths make queue order meaningful: sjf packs
-    # short prompts together, shrinking per-wave padding
-    queue = [_Request(i, int(rng.integers(max(args.prompt_len // 2, 1),
-                                          args.prompt_len + 1)),
-                      arrival=float(i))
-             for i in range(args.requests)]
-    queue = get_placement(args.placement).order_jobs(queue, now=0.0)
-
-    served, t0 = 0, time.time()
-    while queue:
-        wave, queue = queue[:admit], queue[admit:]
-        B, L = len(wave), max(r.prompt_len for r in wave)
-        toks = np.full((B, L), 3, np.int32)
-        for i, r in enumerate(wave):
-            toks[i, L - r.prompt_len:] = rng.integers(
-                3, cfg.vocab_size, r.prompt_len)
-        batch = {"tokens": jnp.asarray(toks)}
-        if cfg.family == "encdec":
-            batch["enc_embeds"] = jnp.asarray(
-                rng.normal(0, 0.02, (B, 8, cfg.d_model)), jnp.float32)
-        if cfg.family == "vlm":
-            batch["patch_embeds"] = jnp.asarray(
-                rng.normal(0, 0.02, (B, 4, cfg.d_model)), jnp.float32)
-        logits, cache = prefill(params, batch)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        outs = [tok]
-        for _ in range(args.decode_steps - 1):
-            lg, cache = decode(params, cache, outs[-1])
-            outs.append(jnp.argmax(lg, -1).astype(jnp.int32))
-        gen = jnp.concatenate(outs, axis=1)
-        served += B
-        print(f"wave: {B} requests (prompts <= {L}), {gen.shape[1]} "
-              f"tokens each (sample: {np.asarray(gen[0])[:8].tolist()})",
-              flush=True)
-    dt = time.time() - t0
-    tot = served * args.decode_steps
-    print(f"served {served} requests / {tot} tokens in {dt:.1f}s "
-          f"({tot/dt:.1f} tok/s)")
+    tot = summary["good_tokens"]
+    print(f"served {summary['completed']} requests / {tot} tokens in "
+          f"{wall:.1f}s wall ({tot / max(wall, 1e-9):.1f} tok/s wall, "
+          f"{summary['goodput_tok_s']:.1f} tok/s virtual)")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,7 @@ from repro.sched.placement import (  # noqa: F401
 from repro.sched.arrivals import (  # noqa: F401
     Arrival,
     ArrivalConfig,
+    load_trace_jsonl,
     poisson_arrivals,
     trace_arrivals,
 )

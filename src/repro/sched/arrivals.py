@@ -99,3 +99,43 @@ def trace_arrivals(trace: Sequence[Tuple[float, str, Union[str, float]]],
             else float(size)
         out.append(Arrival(float(t), by_name[name], float(items)))
     return sorted(out, key=lambda a: a.t)
+
+
+def load_trace_jsonl(path: str,
+                     apps: Sequence[AppProfile]) -> List[Arrival]:
+    """Replay a recorded JSONL trace against an application universe —
+    the entry point for real-cluster-log replay.
+
+    Each non-blank line is an object with ``t`` (arrival seconds),
+    ``app`` (a name in ``apps``), and either ``items`` (explicit M-items)
+    or ``size`` (a Table-4 class name: small/medium/large).  Rows may be
+    out of order in the file; the stream comes back time-sorted, via the
+    same validation as :func:`trace_arrivals`."""
+    import json
+
+    rows: List[Tuple[float, str, Union[str, float]]] = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{ln}: bad JSON: {e}") from None
+            if "t" not in rec or "app" not in rec:
+                raise ValueError(
+                    f"{path}:{ln}: trace rows need 't' and 'app'")
+            if "items" in rec:
+                size: Union[str, float] = float(rec["items"])
+            elif "size" in rec:
+                size = str(rec["size"])
+                if size not in INPUT_SIZES_M_ITEMS:
+                    raise ValueError(
+                        f"{path}:{ln}: unknown size class {size!r} "
+                        f"(known: {tuple(INPUT_SIZES_M_ITEMS)})")
+            else:
+                raise ValueError(
+                    f"{path}:{ln}: trace rows need 'items' or 'size'")
+            rows.append((float(rec["t"]), str(rec["app"]), size))
+    return trace_arrivals(rows, apps)

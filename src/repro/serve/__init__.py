@@ -1,0 +1,50 @@
+"""Continuous-batching serving engine driven by step-level vector
+admission — the serving-side runtime of the paper's co-location scheme.
+
+Where the cluster simulator asks "how many tasks fit on this host", the
+serving engine asks "how many requests fit in this decode step": the
+KV-cache is the growing memory footprint, and admission is re-decided
+every step through the SAME
+:class:`~repro.sched.admission.AdmissionController` /
+:class:`~repro.sched.resources.DemandModel` /
+:class:`~repro.sched.resources.ResourceVector` machinery the simulator
+and ``launch/serve.py`` use.
+
+* ``request`` — :class:`Request` lifecycle (queued/running/finished,
+  evict-and-requeue-with-recompute preemption), duck-typed for the
+  placement registry.
+* ``queue``   — :class:`RequestQueue` over ``sched.arrivals`` streams
+  (Poisson or trace) with pluggable placement ordering;
+  :func:`requests_from_arrivals` adapts cluster arrival streams.
+* ``batcher`` — :class:`ContinuousBatcher`: per-step vector admission
+  (calibrated KV-growth demand curve, binding-axis join inverse via
+  :class:`PrefixCurve`, lowest-priority preemption, ``forced`` progress
+  floor) producing :class:`StepDecision` records.
+* ``backends`` — :class:`SimBackend` (virtual-time cost model for
+  benchmarks/tests) and :class:`JaxBackend` (real
+  ``build_prefill_step``/``build_decode_step`` over a slot-compacted KV
+  cache with bucketed padding, so re-batching does not recompile every
+  step).
+* ``engine``  — :class:`Engine`: the serving loop, ``continuous`` or
+  legacy ``wave`` mode over the same budget/demand/backend.
+* ``metrics`` — :class:`ServingMetrics`: TTFT / TPOT / goodput /
+  preemption rate / per-step binding-axis histograms.
+"""
+from repro.serve.request import Request, RequestState  # noqa: F401
+from repro.serve.queue import (  # noqa: F401
+    RequestQueue,
+    requests_from_arrivals,
+)
+from repro.serve.batcher import (  # noqa: F401
+    ContinuousBatcher,
+    PrefixCurve,
+    ServingDemand,
+    StepDecision,
+)
+from repro.serve.backends import (  # noqa: F401
+    Backend,
+    JaxBackend,
+    SimBackend,
+)
+from repro.serve.engine import MODES, Engine  # noqa: F401
+from repro.serve.metrics import ServingMetrics  # noqa: F401

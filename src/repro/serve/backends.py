@@ -1,0 +1,285 @@
+"""Execution backends for the serving engine.
+
+The engine's scheduling loop (queue -> batcher -> step) is backend
+agnostic; a backend owns *how* a step actually runs and how long it
+takes, behind three operations::
+
+    join(reqs, now)   # (re)compute KV for joining requests -> seconds
+    decode(running)   # one token for every running request  -> seconds
+    remove(reqs)      # release finished/preempted slots
+
+* :class:`SimBackend` — virtual-time cost model, no jax import.  Step
+  cost is ``base + per_seq * batch``; prefill cost is per token.  This is
+  what the benchmark sweep and the tier-1 invariant tests run on: fully
+  deterministic, thousands of steps per second.
+
+* :class:`JaxBackend` — the real thing: drives
+  ``train.step.build_prefill_step`` / ``build_decode_step`` (and through
+  them the decode_attention kernel path) over a slot-compacted KV cache.
+  Re-batching uses **bucketed padding** so membership churn does not
+  recompile every step: batch capacity rounds up to a power of two and
+  join positions quantize to ``sync`` steps, so compile count is bounded
+  by O(log(max_batch) * max_len / sync) shapes instead of one per step.
+
+Dense-cache alignment: the model's cache keeps ONE shared position
+counter, so a joiner's context is left-padded to the running position
+(its tokens occupy the tail).  Joining is therefore only possible while
+``prefill_len <= position`` and ``position + remaining_new <= max_len``
+— the ``joinable`` predicate the engine passes to the queue.  A paged
+KV-cache lifts this; see ROADMAP follow-ons.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.request import Request
+
+PAD_ID = 3  # matches launch/serve.py's filler token
+
+
+class Backend:
+    """Interface; see module docstring.  ``join_stride`` quantizes the
+    engine's join opportunities (1 = any step)."""
+
+    join_stride: int = 1
+
+    @property
+    def empty(self) -> bool:
+        """True when no request occupies a slot — the engine applies the
+        restart cohort rules instead of the mid-stream ``joinable``
+        filter.  Stateless backends are always 'empty'."""
+        return True
+
+    def joinable(self, req: Request) -> bool:
+        return True
+
+    def join(self, reqs: Sequence[Request], now: float) -> float:
+        raise NotImplementedError
+
+    def decode(self, running: Sequence[Request]) -> float:
+        raise NotImplementedError
+
+    def remove(self, reqs: Sequence[Request]) -> None:
+        pass
+
+    @property
+    def position(self) -> int:
+        return 0
+
+
+class SimBackend(Backend):
+    """Virtual-time cost model (no jax): decode-step latency grows with
+    batch size, prefill latency with recomputed tokens.  Tokens are
+    synthesized deterministically so conservation checks can count them."""
+
+    def __init__(self, t_decode_base: float = 5e-3,
+                 t_decode_per_seq: float = 1e-3,
+                 t_prefill_per_token: float = 2e-4):
+        self.t_decode_base = float(t_decode_base)
+        self.t_decode_per_seq = float(t_decode_per_seq)
+        self.t_prefill_per_token = float(t_prefill_per_token)
+
+    @staticmethod
+    def _synth_token(r: Request) -> int:
+        return (r.rid * 7919 + r.tokens_decoded) % 50000
+
+    def join(self, reqs: Sequence[Request], now: float) -> float:
+        # cost covers the recomputed context; THEN the prefill emits one
+        # generated token (its last-position logits), like the jax path
+        cost = self.t_prefill_per_token * sum(r.prefill_len for r in reqs)
+        for r in reqs:
+            if not r.done:
+                r.tokens.append(self._synth_token(r))
+        return cost
+
+    def decode(self, running: Sequence[Request]) -> float:
+        for r in running:
+            if not r.done:  # wave mode: finished requests idle in slots
+                r.tokens.append(self._synth_token(r))
+        return self.step_cost(len(running))
+
+    def step_cost(self, batch: int) -> float:
+        """Cost of one decode step at occupancy ``batch`` (also used by
+        wave mode, where finished requests idle in their slots)."""
+        return self.t_decode_base + self.t_decode_per_seq * max(batch, 1)
+
+
+def _bucket(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
+
+
+class JaxBackend(Backend):
+    """Real prefill/decode over a slot-compacted, bucket-padded cache.
+
+    Slot layout: ``self._slots[i]`` is the request in cache row ``i``;
+    rows ``len(_slots)..cap`` are padding (decoded but discarded).  All
+    rows share the cache position ``self._pos``; joins left-pad to it.
+    """
+
+    def __init__(self, cfg, params=None, max_len: int = 256,
+                 sync: int = 16, seed: int = 0,
+                 step_time: Optional[SimBackend] = None):
+        import jax
+        from repro.models import model as model_lib
+        from repro.train.step import build_decode_step, build_prefill_step
+        self._jax = jax
+        self.cfg = cfg
+        self.max_len = int(max_len)
+        self.join_stride = max(int(sync), 1)
+        self.params = params if params is not None \
+            else model_lib.init(cfg, jax.random.key(seed))
+        # ONE jitted callable each: jax.jit re-specializes per input
+        # shape, and bucketing bounds the distinct shapes it ever sees
+        self._prefill = jax.jit(build_prefill_step(cfg, self.max_len))
+        self._decode = jax.jit(build_decode_step(cfg),
+                               donate_argnums=(1,))
+        self._rng = np.random.default_rng(seed)
+        self._slots: List[Request] = []
+        self._cache = None
+        self._last = None          # [cap, 1] int32 last tokens
+        self._pos = 0
+        # virtual time for deterministic schedules; wall time is
+        # reported separately by the engine's metrics
+        self._timer = step_time or SimBackend()
+
+    # --- joinability ------------------------------------------------------
+    @property
+    def position(self) -> int:
+        return self._pos
+
+    @property
+    def empty(self) -> bool:
+        return not self._slots
+
+    def joinable(self, req: Request) -> bool:
+        if not self._slots:
+            return True  # empty batch restarts at the joiner's length
+        return (req.prefill_len <= self._pos
+                and self._pos + req.remaining_new <= self.max_len)
+
+    # --- slot ops ---------------------------------------------------------
+    def _req_tokens(self, req: Request, length: int) -> np.ndarray:
+        """Prompt + generated-so-far, left-padded to ``length``."""
+        if req.prompt is None:
+            req.prompt = list(self._rng.integers(
+                PAD_ID, self.cfg.vocab_size, req.prompt_len))
+        toks = list(req.prompt) + list(req.tokens)
+        assert len(toks) <= length, (req.rid, len(toks), length)
+        return np.asarray([PAD_ID] * (length - len(toks)) + toks,
+                          np.int32)
+
+    def _prefill_batch(self, reqs: Sequence[Request], length: int):
+        import jax.numpy as jnp
+        bcap = _bucket(len(reqs))
+        toks = np.full((bcap, length), PAD_ID, np.int32)
+        for i, r in enumerate(reqs):
+            toks[i] = self._req_tokens(r, length)
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family == "encdec":
+            batch["enc_embeds"] = jnp.asarray(self._rng.normal(
+                0, 0.02, (bcap, 8, self.cfg.d_model)), jnp.float32)
+        if self.cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.asarray(self._rng.normal(
+                0, 0.02, (bcap, 4, self.cfg.d_model)), jnp.float32)
+        logits, cache = self._prefill(self.params, batch)
+        last = jnp.argmax(logits, -1).astype(jnp.int32)  # [bcap, 1]
+        return cache, last
+
+    @staticmethod
+    def _cache_rows(cache, idx: np.ndarray):
+        """Gather cache rows along the batch axis (axis 1 for stacked
+        [L, B, ...] arrays; the scalar position counter passes through)."""
+        import jax.numpy as jnp
+        i = jnp.asarray(idx)
+        return {k: (v if np.ndim(v) == 0 else jnp.take(v, i, axis=1))
+                for k, v in cache.items()}
+
+    @staticmethod
+    def _emit_prefill_tokens(reqs: Sequence[Request], last) -> None:
+        """A prefill's last-position logits ARE one generated token (the
+        first for a fresh join, the next one for a recompute rejoin) —
+        emit it, as the pre-engine wave driver did."""
+        toks = np.asarray(last[:, 0])
+        for i, r in enumerate(reqs):
+            if not r.done:
+                r.tokens.append(int(toks[i]))
+
+    def join(self, reqs: Sequence[Request], now: float) -> float:
+        import jax.numpy as jnp
+        reqs = list(reqs)
+        if not reqs:
+            return 0.0
+        cost = self._timer.t_prefill_per_token * sum(
+            r.prefill_len for r in reqs)
+        if not self._slots:
+            # (re)start: position = longest prefill, rounded up to the
+            # sync quantum so restart shapes stay bucketed too — but
+            # never so far up that the slowest joiner's remaining decode
+            # would run past max_len (cache writes must stay in bounds)
+            need = max(r.prefill_len for r in reqs)
+            maxr = max(r.remaining_new for r in reqs)
+            pos = -(-need // self.join_stride) * self.join_stride
+            self._pos = max(min(pos, self.max_len - maxr), need)
+            self._cache, self._last = self._prefill_batch(reqs, self._pos)
+            self._slots = reqs
+            self._emit_prefill_tokens(reqs, self._last)
+            return cost
+        assert all(self.joinable(r) for r in reqs)
+        new_cache, new_last = self._prefill_batch(reqs, self._pos)
+        n_old, n_new = len(self._slots), len(reqs)
+        cap = _bucket(n_old + n_new)
+        old_cap = self._last.shape[0]
+        if cap > old_cap:  # grow the bucket: zero-pad the batch axis
+            pad = cap - old_cap
+            self._cache = {
+                k: (v if np.ndim(v) == 0
+                    else jnp.pad(v, [(0, 0), (0, pad)]
+                                 + [(0, 0)] * (v.ndim - 2)))
+                for k, v in self._cache.items()}
+            self._last = jnp.pad(self._last, [(0, pad), (0, 0)])
+        # scatter the joiners' rows into slots [n_old, n_old + n_new)
+        rows = self._cache_rows(new_cache, np.arange(n_new))
+        self._cache = {
+            k: (v if np.ndim(v) == 0 else
+                jnp.concatenate([v[:, :n_old], rows[k],
+                                 v[:, n_old + n_new:]], axis=1))
+            for k, v in self._cache.items()}
+        self._last = jnp.concatenate(
+            [self._last[:n_old], new_last[:n_new],
+             self._last[n_old + n_new:]], axis=0)
+        self._slots = self._slots + reqs
+        self._emit_prefill_tokens(reqs, new_last)
+        return cost
+
+    def decode(self, running: Sequence[Request]) -> float:
+        import jax.numpy as jnp
+        assert set(id(r) for r in running) == \
+            set(id(r) for r in self._slots), "engine/backend slot drift"
+        assert self._pos < self.max_len, \
+            "decode would write past max_len — join gating broke"
+        logits, self._cache = self._decode(self.params, self._cache,
+                                           self._last)
+        self._last = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks = np.asarray(self._last[:, 0])
+        for i, r in enumerate(self._slots):
+            if not r.done:  # wave mode: finished requests idle in slots
+                r.tokens.append(int(toks[i]))
+        self._pos += 1
+        return self._timer.step_cost(len(self._slots))
+
+    def remove(self, reqs: Sequence[Request]) -> None:
+        drop = {id(r) for r in reqs}
+        keep = [i for i, r in enumerate(self._slots)
+                if id(r) not in drop]
+        self._slots = [self._slots[i] for i in keep]
+        if not self._slots:
+            self._cache, self._last, self._pos = None, None, 0
+            return
+        cap = _bucket(len(self._slots))
+        idx = np.asarray(keep + [keep[0]] * (cap - len(keep)))
+        self._cache = self._cache_rows(self._cache, idx)
+        import jax.numpy as jnp
+        self._last = jnp.take(self._last, jnp.asarray(idx), axis=0)

@@ -1,0 +1,266 @@
+"""Step-level vector admission for continuous batching.
+
+``launch/serve.py``'s wave mode asks the admission controller ONCE —
+"how many requests fit?" — and serves fixed waves.  This module asks the
+same question **every decode step**, through the same
+:class:`~repro.sched.admission.AdmissionController` /
+:class:`~repro.sched.resources.DemandModel` /
+:class:`~repro.sched.resources.ResourceVector` machinery:
+
+* per-request demand is a calibrated curve over the *live* context
+  length ``prompt_len + tokens_decoded`` — weights amortized once,
+  KV-cache growing one token per step (:class:`ServingDemand`);
+* joins go through the controller's binding-axis inverse: the marginal
+  demand of admitting the first ``u`` pending requests is a monotone
+  :class:`PrefixCurve` per axis, wrapped in a :class:`DemandModel` and
+  inverted under the step's *headroom* vector — exactly the
+  ``admit_batch`` code path, so the decision records the binding axis
+  and ``forced`` the same way;
+* when next step's KV growth would breach the budget, the batcher
+  preempts lowest-priority running requests (last in placement order,
+  evict-and-requeue with recompute) until the step fits — or flags the
+  step ``forced`` when even a single request is over budget (a server
+  must make progress).
+
+The booked footprint here is the *modeled* demand — the paged-KV view
+where a request occupies ``kv(context)`` — which is what admission
+decides on; a dense-cache execution backend may additionally round
+capacity up to its padding bucket (see ``serve/backends.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.experts import MemoryFunction
+from repro.sched.admission import AdmissionController
+from repro.sched.placement import PlacementPolicy, get_placement
+from repro.sched.resources import DemandModel, ResourceVector
+from repro.serve.request import Request
+
+_EPS = 1e-9
+
+
+class PrefixCurve:
+    """Monotone piecewise-linear curve through the cumulative demand of
+    an *ordered* candidate list: ``fn(u)`` is the demand of admitting the
+    first ``u`` candidates (linear between whole requests), ``inverse(y)``
+    the largest ``u`` whose prefix fits ``y``.  Duck-types
+    :class:`~repro.core.experts.MemoryFunction` so it plugs straight into
+    :class:`~repro.sched.resources.DemandModel` and the controller's
+    binding-axis inverse."""
+
+    family = "prefix"
+
+    def __init__(self, costs: Sequence[float]):
+        costs = [float(c) for c in costs]
+        if any(c < 0 for c in costs):
+            raise ValueError("per-request demands must be >= 0")
+        self._cum = np.concatenate([[0.0], np.cumsum(costs)])
+
+    def __call__(self, u) -> float:
+        u = float(np.clip(u, 0.0, len(self._cum) - 1))
+        return float(np.interp(u, np.arange(len(self._cum)), self._cum))
+
+    def inverse(self, y: float, x_hint: float = 1.0) -> float:
+        y = float(y)
+        if y < 0:
+            return 0.0
+        if y >= self._cum[-1] - _EPS:
+            # every candidate fits: the curve is exhausted, not unbounded
+            return float(len(self._cum) - 1)
+        k = int(np.searchsorted(self._cum, y + _EPS, side="right") - 1)
+        span = self._cum[k + 1] - self._cum[k]
+        frac = (y - self._cum[k]) / span if span > _EPS else 0.0
+        return float(k + min(max(frac, 0.0), 1.0 - 1e-12))
+
+
+@dataclass
+class ServingDemand:
+    """Per-request serving footprint derived from a calibrated
+    :class:`DemandModel` (``DemandModel.from_model_config``): the affine
+    footprint-vs-batch fit at ``max_len`` gives weights (intercept,
+    amortized across the batch) and KV at full length (slope), from which
+    the per-token KV slice follows."""
+
+    weights_gb: float           # resident once, however many requests
+    kv_gb_per_token: float      # per request, per context token
+    host_ram_per_req_gb: float = 0.0  # pinned host staging per request
+    extra_axes: Dict[str, float] = field(default_factory=dict)
+
+    @classmethod
+    def from_demand_model(cls, dm: DemandModel, max_len: int
+                          ) -> "ServingDemand":
+        fn = dm.primary_fn
+        if fn is None or getattr(fn, "family", None) != "affine":
+            raise ValueError(
+                "ServingDemand needs an affine footprint-vs-batch fit on "
+                "the primary axis (DemandModel.from_model_config)")
+        host = dm.curves.get("host_ram")
+        return cls(weights_gb=float(fn.m),
+                   kv_gb_per_token=float(fn.b) / float(max_len),
+                   host_ram_per_req_gb=float(host.b)
+                   if host is not None else 0.0)
+
+    def request_vector(self, req: Request, extra_tokens: int = 0
+                       ) -> ResourceVector:
+        """Marginal demand of ``req`` holding ``context + extra_tokens``
+        KV slots (weights excluded — they are booked once, below)."""
+        axes = {"hbm": self.kv_gb_per_token
+                * (req.context_len + extra_tokens)}
+        if self.host_ram_per_req_gb > 0.0:
+            axes["host_ram"] = self.host_ram_per_req_gb
+        axes.update(self.extra_axes)
+        return ResourceVector(**axes)
+
+    def booked(self, running: Sequence[Request], extra_tokens: int = 0
+               ) -> ResourceVector:
+        """Total modeled footprint of the running set after each request
+        grows by ``extra_tokens``."""
+        total = ResourceVector(hbm=self.weights_gb)
+        for r in running:
+            total = total + self.request_vector(r, extra_tokens)
+        return total
+
+
+@dataclass(frozen=True)
+class StepDecision:
+    """What the batcher decided for one decode step — the step-level
+    analogue of :class:`~repro.sched.admission.AdmissionDecision`."""
+    step: int
+    t: float
+    admitted: Tuple[int, ...]       # rids joining this step
+    preempted: Tuple[int, ...]      # rids evicted-and-requeued
+    batch: int                      # running batch size after the plan
+    booked: ResourceVector          # modeled footprint after the plan
+    budget: ResourceVector
+    binding_axis: Optional[str]     # axis that bound the join inverse
+    forced: bool                    # step proceeds over budget
+    forced_axes: Tuple[str, ...] = ()
+
+    @property
+    def over_budget(self) -> bool:
+        return not self.booked.fits(self.budget)
+
+
+class ContinuousBatcher:
+    """Re-decides batch membership every decode step.
+
+    ``plan_step`` is pure planning — it mutates nothing; the engine
+    applies the returned :class:`StepDecision` (evictions, joins) to the
+    queue and the execution backend.  Invariants (pinned by
+    ``tests/test_serve.py``):
+
+    * the booked footprint never exceeds the budget on any axis at any
+      step unless the decision is ``forced``;
+    * ``forced`` only ever covers the single-request floor — a forced
+      step runs exactly one request (the progress guarantee of
+      ``admit_batch(min_batch=1)``);
+    * planning is deterministic given (running, pending, now).
+    """
+
+    def __init__(self, demand: ServingDemand, budget: ResourceVector,
+                 controller: Optional[AdmissionController] = None,
+                 placement: Union[str, PlacementPolicy] = "fcfs",
+                 max_batch: int = 64):
+        if "hbm" not in budget:
+            raise ValueError("serving budget must carry the hbm axis")
+        if budget["hbm"] <= 0:
+            raise ValueError("hbm budget must be positive")
+        self.demand = demand
+        self.budget = budget
+        self.controller = controller or AdmissionController()
+        self.placement = get_placement(placement) \
+            if isinstance(placement, str) else placement
+        self.max_batch = int(max_batch)
+
+    # --- planning ---------------------------------------------------------
+    def plan_step(self, running: Sequence[Request],
+                  pending: Sequence[Request], now: float, step: int
+                  ) -> StepDecision:
+        """Plan the next decode step: evictions first (KV growth must
+        fit), then joins through the controller's binding-axis inverse
+        under the remaining headroom.  ``pending`` must already be in
+        placement order (the queue's job)."""
+        running = list(running)
+        preempted: List[int] = []
+        forced = False
+        forced_axes: Tuple[str, ...] = ()
+
+        # 1. next step's KV growth: evict lowest-priority until it fits
+        victims = list(reversed(self.placement.order_jobs(running,
+                                                          now=now)))
+        while running and not self.demand.booked(running, 1).fits(
+                self.budget):
+            if len(running) == 1:
+                # the progress floor: one request runs even over budget
+                forced = True
+                forced_axes = self._violated(running, 1)
+                break
+            v = victims.pop(0)
+            running.remove(v)
+            preempted.append(v.rid)
+
+        # 2. join new prefills under the post-eviction headroom
+        admitted: List[int] = []
+        binding: Optional[str] = None
+        slots = self.max_batch - len(running)
+        # running and pending are disjoint by contract (a victim is only
+        # requeued AFTER the plan is applied), so a just-evicted request
+        # can never be re-admitted within the same plan
+        assert not preempted or \
+            not {r.rid for r in pending} & set(preempted)
+        cands = list(pending)[:slots] if slots > 0 else []
+        if cands and not forced:
+            headroom = self.budget.headroom(
+                self.demand.booked(running, 1))
+            dec = self.controller.admit(
+                self._join_demand(cands), headroom,
+                cap=float(len(cands)), book=False)
+            n = int(np.floor(dec.units + 1e-9))
+            binding = dec.binding_axis
+            admitted = [r.rid for r in cands[:n]]
+            running.extend(cands[:n])
+            if not running and pending:
+                # nothing runs and nothing fits: forced single admission
+                # (admit_batch's min_batch=1 progress guarantee)
+                first = cands[0]
+                running.append(first)
+                admitted = [first.rid]
+                forced = True
+                forced_axes = self._violated(running, 2)
+
+        # end-of-step footprint: incumbents grow one token; joiners gain
+        # two (the prefill-emitted token plus the decode-step token)
+        joined = set(admitted)
+        booked = ResourceVector(hbm=self.demand.weights_gb)
+        for r in running:
+            booked = booked + self.demand.request_vector(
+                r, 2 if r.rid in joined else 1)
+        return StepDecision(
+            step=step, t=now, admitted=tuple(admitted),
+            preempted=tuple(preempted), batch=len(running),
+            booked=booked, budget=self.budget, binding_axis=binding,
+            forced=forced, forced_axes=forced_axes)
+
+    # --- helpers ----------------------------------------------------------
+    def _join_demand(self, cands: Sequence[Request]) -> DemandModel:
+        """Marginal demand of admitting the first ``u`` ordered
+        candidates, as per-axis prefix curves the controller can invert.
+        Joiners are charged their full post-step context: the prefill
+        emits one token and the decode step a second."""
+        curves: Dict[str, object] = {"hbm": PrefixCurve(
+            [self.demand.kv_gb_per_token * (r.context_len + 2)
+             for r in cands])}
+        if self.demand.host_ram_per_req_gb > 0.0:
+            curves["host_ram"] = MemoryFunction(
+                "affine", 0.0, self.demand.host_ram_per_req_gb)
+        return DemandModel(curves, primary_axis="hbm")
+
+    def _violated(self, running: Sequence[Request],
+                  extra_tokens: int) -> Tuple[str, ...]:
+        booked = self.demand.booked(running, extra_tokens)
+        return tuple(a for a, v in booked.items()
+                     if a in self.budget and v > self.budget[a] + _EPS)

@@ -1,0 +1,251 @@
+"""The serving loop: continuous batching driven by step-level admission.
+
+Two modes over the same queue, demand model, budget, and backend:
+
+* ``continuous`` — the tentpole: every decode step re-plans batch
+  membership through :class:`~repro.serve.batcher.ContinuousBatcher`
+  (joins when the binding-axis inverse says the KV fits, immediate
+  retirement, evict-and-requeue preemption when decode growth would
+  breach the budget).
+* ``wave``       — the legacy ``launch/serve.py`` behaviour for
+  comparison: admission once per wave via ``admit_batch`` against the
+  worst-case (full-context) footprint, no joins until the whole wave
+  drains — finished requests idle in their slots, which is exactly the
+  throughput continuous batching reclaims.
+
+Time is virtual (backend cost model), so identical seeds give identical
+schedules and metrics on any machine; the jax backend's real compute
+rides inside those steps.
+
+Termination is structural, not best-effort: every loop iteration either
+decodes one token of at least one request (and tokens, once decoded,
+survive preemption via recompute) or consumes a future arrival, so the
+loop runs at most ``sum(max_new_tokens) + len(requests)`` iterations —
+a preemption storm cannot live-lock.  ``max_steps`` is an assertion
+backstop on that bound, not a tuning knob.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.experts import MemoryFunction
+from repro.sched.admission import AdmissionController
+from repro.sched.resources import DemandModel, ResourceVector
+from repro.serve.backends import Backend, SimBackend
+from repro.serve.batcher import (ContinuousBatcher, ServingDemand,
+                                 StepDecision)
+from repro.serve.metrics import ServingMetrics
+from repro.serve.queue import RequestQueue
+from repro.serve.request import Request, RequestState
+
+MODES = ("continuous", "wave")
+
+
+class Engine:
+    """Drives a request population to completion under a resource budget.
+
+    ``run()`` returns the metrics summary; the step-by-step record stays
+    on ``engine.metrics`` for the invariant tests and benchmarks.
+    """
+
+    def __init__(self, requests: Sequence[Request],
+                 demand: ServingDemand,
+                 budget: Union[float, ResourceVector],
+                 backend: Optional[Backend] = None,
+                 mode: str = "continuous",
+                 placement: str = "fcfs",
+                 max_batch: int = 16,
+                 controller: Optional[AdmissionController] = None):
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r} (choose from {MODES})")
+        if not isinstance(budget, ResourceVector):
+            budget = ResourceVector(hbm=float(budget))
+        self.mode = mode
+        self.demand = demand
+        self.budget = budget
+        self.backend = backend or SimBackend()
+        self.controller = controller or AdmissionController()
+        self.max_batch = int(max_batch)
+        self.requests = list(requests)
+        max_len = getattr(self.backend, "max_len", None)
+        if max_len is not None:
+            for r in self.requests:
+                if r.prompt_len + r.max_new_tokens > max_len:
+                    raise ValueError(
+                        f"request {r.rid}: prompt+new "
+                        f"{r.prompt_len + r.max_new_tokens} exceeds the "
+                        f"backend's max_len {max_len}")
+        self.queue = RequestQueue(self.requests, placement=placement)
+        self.batcher = ContinuousBatcher(
+            demand, budget, controller=self.controller,
+            placement=self.queue.placement, max_batch=self.max_batch)
+        self.metrics = ServingMetrics()
+        for r in self.requests:
+            self.metrics.record_request(r)
+        # structural bound: one decoded token per step minimum, plus one
+        # idle-advance per arrival (see module docstring)
+        self.max_steps = sum(r.max_new_tokens for r in self.requests) \
+            + len(self.requests) + 8
+
+    # --- candidate filtering ---------------------------------------------
+    def _candidates(self, now: float) -> List[Request]:
+        """Pending requests the backend can physically join right now
+        (position/window constraints), in placement order."""
+        pending = self.queue.pending(now)
+        if self.backend.position and \
+                self.backend.position % self.backend.join_stride:
+            return []  # joins quantize to the backend's sync points
+        if self.backend.empty:
+            # empty batch restarts: greedy cohort whose shared position
+            # window fits everyone (max prefill + max remaining <= cap)
+            max_len = getattr(self.backend, "max_len", None)
+            if max_len is None:
+                return pending
+            out, maxp, maxr = [], 0, 0
+            for r in pending:
+                p = max(maxp, r.prefill_len)
+                n = max(maxr, r.remaining_new)
+                if p + n <= max_len:
+                    out.append(r)
+                    maxp, maxr = p, n
+            return out
+        return [r for r in pending if self.backend.joinable(r)]
+
+    # --- shared step application -----------------------------------------
+    def _apply(self, plan: StepDecision, running: List[Request],
+               by_rid: Dict[int, Request], now: float) -> float:
+        """Evict, requeue, join.  Returns the join (prefill) cost."""
+        evicted = [by_rid[rid] for rid in plan.preempted]
+        if evicted:
+            self.backend.remove(evicted)
+            for r in evicted:
+                r.preemptions += 1
+                running.remove(r)
+                self.queue.requeue(r)
+        joined = [by_rid[rid] for rid in plan.admitted]
+        dt = 0.0
+        if joined:
+            self.queue.take(joined)
+            dt = self.backend.join(joined, now)
+            for r in joined:
+                r.admissions += 1
+                r.state = RequestState.RUNNING
+            running.extend(joined)
+        return dt
+
+    def _retire(self, running: List[Request], now: float) -> None:
+        done = [r for r in running if r.done]
+        if done:
+            self.backend.remove(done)
+            for r in done:
+                r.state = RequestState.FINISHED
+                r.finish_t = now
+                running.remove(r)
+
+    # --- the loops --------------------------------------------------------
+    def run(self) -> Dict:
+        t = self._run_continuous() if self.mode == "continuous" \
+            else self._run_wave()
+        return self.metrics.summary(elapsed=t)
+
+    def _run_continuous(self) -> float:
+        t, step = 0.0, 0
+        running: List[Request] = []
+        by_rid = {r.rid: r for r in self.requests}
+        while running or not self.queue.drained:
+            self.queue.release(t)
+            cands = self._candidates(t)
+            if not running and not cands:
+                nxt = self.queue.next_arrival()
+                if nxt is None:
+                    # pending exists but nothing can join (should be
+                    # impossible: empty batch accepts any valid request)
+                    raise RuntimeError("serving deadlock: pending "
+                                       "requests but no candidates")
+                t = nxt
+                continue
+            plan = self.batcher.plan_step(running, cands, t, step)
+            dt = self._apply(plan, running, by_rid, t)
+            dt += self.backend.decode(running)
+            t += dt
+            step += 1
+            for r in running:
+                if r.first_token_t is None:
+                    r.first_token_t = t
+            self._retire(running, t)
+            self.metrics.record_step(plan, dt)
+            if step > self.max_steps:
+                raise RuntimeError(
+                    f"engine exceeded its structural step bound "
+                    f"({self.max_steps}) — termination invariant broken")
+        return t
+
+    def _wave_admission(self, cands: Sequence[Request]):
+        """Once-per-wave admission against the worst-case footprint:
+        every slot booked at the wave's longest full context (the
+        pre-engine ``launch/serve.py`` behaviour)."""
+        lmax = max(r.prefill_len + r.remaining_new for r in cands)
+        curves = {"hbm": MemoryFunction(
+            "affine", self.demand.weights_gb,
+            self.demand.kv_gb_per_token * lmax)}
+        if self.demand.host_ram_per_req_gb > 0.0:
+            curves["host_ram"] = MemoryFunction(
+                "affine", 0.0, self.demand.host_ram_per_req_gb)
+        dm = DemandModel(curves, primary_axis="hbm")
+        return self.controller.admit_batch(
+            dm, self.budget, min_batch=1,
+            max_batch=min(self.max_batch, len(cands)))
+
+    def _run_wave(self) -> float:
+        t, step = 0.0, 0
+        by_rid = {r.rid: r for r in self.requests}
+        while not self.queue.drained:
+            self.queue.release(t)
+            cands = self._candidates(t)
+            if not cands:
+                nxt = self.queue.next_arrival()
+                if nxt is None:
+                    raise RuntimeError("serving deadlock in wave mode")
+                t = nxt
+                continue
+            dec = self._wave_admission(cands)
+            wave = cands[:int(dec.units)]
+            plan = StepDecision(
+                step=step, t=t, admitted=tuple(r.rid for r in wave),
+                preempted=(), batch=len(wave),
+                booked=self.demand.booked(wave, 0), budget=self.budget,
+                binding_axis=dec.binding_axis,
+                forced=bool(dec.info.get("forced")),
+                forced_axes=tuple(dec.info.get("forced_axes", ())))
+            dt = self._apply(plan, [], by_rid, t)
+            wave_live = [by_rid[rid] for rid in plan.admitted]
+            self.metrics.record_step(plan, dt)
+            step += 1            # step ids stay unique and monotone
+            t += dt
+            for r in wave_live:  # the wave's prefill emitted one token
+                if r.first_token_t is None and r.tokens_decoded:
+                    r.first_token_t = t
+            # drain the whole wave: finished requests idle in their
+            # slots (full-occupancy step cost) until the last finishes
+            while any(not r.done for r in wave_live):
+                sdt = self.backend.decode(wave_live)
+                t += sdt
+                for r in wave_live:
+                    if r.first_token_t is None and r.tokens_decoded:
+                        r.first_token_t = t
+                self.metrics.record_step(StepDecision(
+                    step=step, t=t, admitted=(), preempted=(),
+                    batch=len(wave_live),
+                    booked=self.demand.booked(wave_live, 0),
+                    budget=self.budget, binding_axis=None,
+                    forced=plan.forced,
+                    forced_axes=plan.forced_axes), sdt)
+                step += 1
+                if step > self.max_steps:
+                    raise RuntimeError("wave mode exceeded its "
+                                       "structural step bound")
+            for r in wave_live:
+                r.state = RequestState.FINISHED
+                r.finish_t = t
+            self.backend.remove(wave_live)
+        return t

@@ -1,0 +1,112 @@
+"""Serving-side metrics: TTFT, TPOT, goodput, preemption rate, and the
+per-step binding-axis view.
+
+The cluster simulator reports STP/ANTT per job; a serving system is
+judged per *token*:
+
+* **TTFT** — time to first token: first decoded token's timestamp minus
+  arrival (queueing + prefill; preemption does not reset it).
+* **TPOT** — time per output token after the first (decode cadence,
+  averaged over each request's stream).
+* **goodput** — completed requests' generated tokens per second of
+  engine time: tokens of requests that never finished do not count, so
+  over-admission that thrashes shows up as a goodput LOSS even though
+  raw step throughput looks busy.
+* **preemption rate** — evictions per admission (an admission is the
+  first join or any re-join after eviction).
+* **binding axes** — which resource axis bound each step's join inverse,
+  histogrammed exactly like the simulator's per-axis counters, plus
+  forced-step and occupancy accounting.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.batcher import StepDecision
+from repro.serve.request import Request, RequestState
+
+
+def _pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, float), q)) if len(xs) \
+        else 0.0
+
+
+class ServingMetrics:
+    """Accumulates per-step decisions and per-request lifecycles; the
+    engine owns the timestamps (virtual time, so identical seeds give
+    identical metrics)."""
+
+    def __init__(self):
+        self.steps: List[StepDecision] = []
+        self.step_times: List[float] = []
+        self.requests: List[Request] = []
+        self._admissions = 0
+        self._preemptions = 0
+        self._forced_steps = 0
+        self.binding_axes: Dict[str, int] = {}
+
+    # --- recording --------------------------------------------------------
+    def record_step(self, dec: StepDecision, dt: float) -> None:
+        self.steps.append(dec)
+        self.step_times.append(float(dt))
+        self._admissions += len(dec.admitted)
+        self._preemptions += len(dec.preempted)
+        if dec.forced:
+            self._forced_steps += 1
+        if dec.binding_axis is not None and dec.admitted:
+            self.binding_axes[dec.binding_axis] = \
+                self.binding_axes.get(dec.binding_axis, 0) + 1
+
+    def record_request(self, req: Request) -> None:
+        self.requests.append(req)
+
+    # --- summary ----------------------------------------------------------
+    def summary(self, elapsed: Optional[float] = None) -> Dict:
+        done = [r for r in self.requests
+                if r.state == RequestState.FINISHED]
+        elapsed = float(elapsed if elapsed is not None
+                        else (self.steps[-1].t + self.step_times[-1]
+                              if self.steps else 0.0))
+        ttft = [r.first_token_t - r.arrival for r in done
+                if r.first_token_t is not None]
+        tpot = [(r.finish_t - r.first_token_t) / (r.tokens_decoded - 1)
+                for r in done
+                if r.finish_t is not None and r.first_token_t is not None
+                and r.tokens_decoded > 1]
+        good_tokens = sum(r.tokens_decoded for r in done)
+        batches = [d.batch for d in self.steps if d.batch > 0]
+        return {
+            "requests": len(self.requests),
+            "completed": len(done),
+            "steps": len(self.steps),
+            "elapsed_s": elapsed,
+            "ttft_mean_s": float(np.mean(ttft)) if ttft else 0.0,
+            "ttft_p95_s": _pct(ttft, 95),
+            "tpot_mean_s": float(np.mean(tpot)) if tpot else 0.0,
+            "goodput_tok_s": good_tokens / max(elapsed, 1e-12),
+            "goodput_req_s": len(done) / max(elapsed, 1e-12),
+            "good_tokens": good_tokens,
+            "admissions": self._admissions,
+            "preemptions": self._preemptions,
+            "preemption_rate": self._preemptions
+            / max(self._admissions, 1),
+            "forced_steps": self._forced_steps,
+            "mean_batch": float(np.mean(batches)) if batches else 0.0,
+            "binding_axes": dict(self.binding_axes),
+        }
+
+    def format_summary(self, s: Optional[Dict] = None) -> str:
+        s = s or self.summary()
+        axes = " ".join(f"{a}:{n}" for a, n in
+                        sorted(s["binding_axes"].items())) or "-"
+        return (f"{s['completed']}/{s['requests']} requests in "
+                f"{s['elapsed_s']:.2f}s ({s['steps']} steps, mean batch "
+                f"{s['mean_batch']:.1f}) | goodput "
+                f"{s['goodput_tok_s']:.1f} tok/s | TTFT "
+                f"{s['ttft_mean_s'] * 1e3:.0f}ms (p95 "
+                f"{s['ttft_p95_s'] * 1e3:.0f}ms) | TPOT "
+                f"{s['tpot_mean_s'] * 1e3:.1f}ms | preemptions "
+                f"{s['preemptions']} ({s['preemption_rate']:.2f}/adm) | "
+                f"forced {s['forced_steps']} | binding [{axes}]")

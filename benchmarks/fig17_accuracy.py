@@ -1,6 +1,12 @@
 """Paper Fig. 17/18: predicted vs measured memory footprint under
 leave-one-out cross-validation (paper: ~5% average error, worst ~8-12%
-over-provision)."""
+over-provision) — reported per registered demand estimator.
+
+The MoE rows keep the paper's protocol (LOOCV for HB/BDB training apps,
+the full trained selector for SP/SB); the other registry entries
+(oracle / single-family / ann / conservative) run the same probe budget
+through ``estimate()`` so the table compares like for like.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -8,35 +14,70 @@ import numpy as np
 from benchmarks.common import emit, get_suite, save_result
 from repro.core.predictor import MoEPredictor
 from repro.core.workloads import loocv_training_set, training_apps
+from repro.sched.estimator import JobTarget, get_estimator
+
+ITEMS = 30.0    # ~280GB-class input as in the paper's figure
+TOTAL = 1000.0  # full input the 5%/10% probes are taken from
+
+#: registry entries evaluated (kv-growth targets serving models, not
+#: jobs); single-family uses the power family — the strongest of the
+#: one-family baselines on this suite
+ESTIMATORS = ("moe", "oracle", "single-family", "ann", "conservative")
 
 
-def main() -> dict:
-    apps, train, _, _ = get_suite()
-    rng = np.random.default_rng(0)
-    payload = {"per_app": {}}
-    errs = []
-    # LOOCV for HB/BDB apps; the full trained model for SP/SB (paper 5.2)
-    full = MoEPredictor().fit(train)
-    items = 30.0  # ~280GB-class input as in the paper's figure
-    for app in apps:
+def _estimator_for(name: str, app, apps, train, full_moe, ann):
+    if name == "moe":
+        # LOOCV for HB/BDB apps; the full trained model for SP/SB
+        # (paper 5.2)
         if app.suite in ("HB", "BDB"):
             pred = MoEPredictor().fit(loocv_training_set(apps, app))
         else:
-            pred = full
-        fn, info = pred.predict_function(app, 1000.0, rng)
-        t = float(app.true_fn(items))
-        p = float(fn(items))
-        err = (p - t) / t
-        errs.append(abs(err))
-        payload["per_app"][app.name] = {
-            "true_gb": t, "pred_gb": p, "rel_err": err,
-            "family_sel": info["family"], "family_true": app.family}
-    payload["mean_abs_err"] = float(np.mean(errs))
-    payload["max_abs_err"] = float(np.max(errs))
+            pred = full_moe
+        return get_estimator("moe", predictor=pred)
+    if name == "ann":
+        return get_estimator("ann", predictor=ann)
+    if name == "single-family":
+        return get_estimator("single-family", family="power")
+    return get_estimator(name)
+
+
+def main() -> dict:
+    apps, train, full_moe, ann = get_suite()
+    payload: dict = {"per_estimator": {}}
+    for est_name in ESTIMATORS:
+        rng = np.random.default_rng(0)
+        per_app, errs = {}, []
+        for app in apps:
+            est = _estimator_for(est_name, app, apps, train, full_moe,
+                                 ann)
+            de = est.estimate(JobTarget(app, TOTAL), rng=rng)
+            t = float(app.true_fn(ITEMS))
+            p = float(de.primary_fn(ITEMS))
+            err = (p - t) / t
+            errs.append(abs(err))
+            per_app[app.name] = {
+                "true_gb": t, "pred_gb": p, "rel_err": err,
+                "family_sel": de.info.get("family"),
+                "family_true": app.family,
+                "conservative": de.conservative}
+        payload["per_estimator"][est_name] = {
+            "per_app": per_app,
+            "mean_abs_err": float(np.mean(errs)),
+            "max_abs_err": float(np.max(errs)),
+        }
+        emit(f"fig17_mean_abs_err_{est_name}",
+             round(float(np.mean(errs)) * 100, 2), "percent")
+        emit(f"fig17_max_abs_err_{est_name}",
+             round(float(np.max(errs)) * 100, 2), "percent")
+    moe_row = payload["per_estimator"]["moe"]
+    payload["mean_abs_err"] = moe_row["mean_abs_err"]
+    payload["max_abs_err"] = moe_row["max_abs_err"]
     payload["paper_claims"] = {"mean": 0.05, "worst": 0.12}
-    emit("fig17_mean_abs_err", round(float(np.mean(errs)) * 100, 2),
-         "percent; paper: ~5")
-    emit("fig17_max_abs_err", round(float(np.max(errs)) * 100, 2),
+    # the paper's headline numbers keep their original row names
+    emit("fig17_mean_abs_err",
+         round(moe_row["mean_abs_err"] * 100, 2), "percent; paper: ~5")
+    emit("fig17_max_abs_err",
+         round(moe_row["max_abs_err"] * 100, 2),
          "percent; paper: 8-12 over-provision on worst apps")
     save_result("fig17", payload)
     return payload

@@ -27,20 +27,32 @@ POLICIES = ("ours", "oracle", "pairwise")
 
 
 def _policy_factory(name, moe, refreshers: list):
+    import os
+
     from repro.core.predictor import OraclePredictor
     from repro.core.simulator import (OraclePolicy, OursPolicy,
                                       PairwisePolicy)
-    from repro.sched import OnlineRefresher
+    from repro.sched import OnlineRefresher, get_estimator
 
     def make(stream_seed: int):
         if name == "ours":
-            # partial_update mutates the predictor — refresh a COPY so
-            # streams/rates stay independent and reruns against the
-            # module-cached suite stay reproducible
-            moe_local = copy.deepcopy(moe)
-            ref = OnlineRefresher(moe_local)
-            refreshers.append(ref)
-            return OursPolicy(moe_local, refresher=ref)
+            # The refresher streams into the registry HANDLE
+            # (DemandEstimator protocol: families / select_family /
+            # partial_update) — no reaching into MoEPredictor internals.
+            est_name = os.environ.get("REPRO_ESTIMATOR", "") or "moe"
+            est = get_estimator(est_name, predictor=moe)
+            ref = None
+            if est.supports_online_update:
+                # partial_update mutates the estimator's selector —
+                # wrap a COPY so streams/rates stay independent and
+                # reruns against the module-cached suite stay
+                # reproducible (estimators that ignore the predictor
+                # skip the copy entirely)
+                est = get_estimator(est_name,
+                                    predictor=copy.deepcopy(moe))
+                ref = OnlineRefresher(est)
+                refreshers.append(ref)
+            return OursPolicy(estimator=est, refresher=ref)
         if name == "oracle":
             return OraclePolicy(OraclePredictor())
         if name == "pairwise":

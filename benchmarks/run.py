@@ -8,6 +8,11 @@
     run every simulation under a non-default placement policy
     (repro.sched.placement registry: fcfs / sjf / best-fit /
     arrival-aware)
+``python -m benchmarks.run --estimator conservative --bench open_arrivals``
+    run the OURS policy through a non-default demand estimator
+    (sweepable repro.sched.estimator entries: moe / oracle /
+    single-family / conservative; baselines keep their defining
+    predictors) — the CI smoke gate sweeps moe + conservative
 
 Prints ``name,value,derived`` CSV rows; per-bench JSON lands in results/.
 """
@@ -48,6 +53,10 @@ def main() -> None:
     ap.add_argument("--placement", default=None,
                     help="placement policy for every SimConfig "
                          "(fcfs/sjf/best-fit/arrival-aware)")
+    ap.add_argument("--estimator", default=None,
+                    help="demand estimator for the OURS policy in every "
+                         "SimConfig (moe/oracle/single-family/"
+                         "conservative)")
     args = ap.parse_args()
     # env, not arguments: bench modules build their SimConfigs
     # themselves; the environment is read at (deferred) import time
@@ -60,6 +69,12 @@ def main() -> None:
             ap.error(f"unknown placement {args.placement!r} "
                      f"(available: {available_placements()})")
         os.environ["REPRO_PLACEMENT"] = args.placement
+    if args.estimator is not None:
+        from repro.sched.estimator import SWEEPABLE_ESTIMATORS
+        if args.estimator not in SWEEPABLE_ESTIMATORS:
+            ap.error(f"estimator {args.estimator!r} is not sweepable "
+                     f"(choose from: {SWEEPABLE_ESTIMATORS})")
+        os.environ["REPRO_ESTIMATOR"] = args.estimator
     todo = BENCHES if not args.bench else [
         b for b in BENCHES if any(b.startswith(p) for p in args.bench)]
     failures = []

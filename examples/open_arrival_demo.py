@@ -24,7 +24,8 @@ from repro.core.experts import MemoryFunction
 from repro.core.metrics import windowed_metrics
 from repro.core.simulator import OursPolicy
 from repro.core.workloads import FEATURE_NAMES, AppProfile
-from repro.sched import ArrivalConfig, OnlineRefresher, poisson_arrivals
+from repro.sched import (ArrivalConfig, OnlineRefresher, get_estimator,
+                         poisson_arrivals)
 
 
 def novel_apps(n: int = 6, seed: int = 123):
@@ -47,8 +48,11 @@ def novel_apps(n: int = 6, seed: int = 123):
 
 def run_stream(apps, arrivals, moe, cfg, refresh: bool,
                placement: str = "fcfs"):
-    ref = OnlineRefresher(moe) if refresh else None
-    sim = Simulator(None, OursPolicy(moe, refresher=ref,
+    # the refresher streams through the DemandEstimator registry handle
+    # (partial_update), not into MoEPredictor internals
+    est = get_estimator("moe", predictor=moe)
+    ref = OnlineRefresher(est) if refresh else None
+    sim = Simulator(None, OursPolicy(estimator=est, refresher=ref,
                                      placement=placement),
                     cfg, seed=0, arrivals=arrivals)
     out = sim.run()

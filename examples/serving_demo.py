@@ -18,7 +18,7 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config
-from repro.sched import DemandModel, ResourceVector
+from repro.sched import ModelTarget, ResourceVector, get_estimator
 from repro.serve import Engine, JaxBackend, Request, ServingDemand
 
 
@@ -35,11 +35,13 @@ def main():
     cfg = get_config("qwen3-0.6b", smoke=True)
 
     # --- the paper's runtime path, applied to serving capacity ---------
-    # two-point calibration of footprint-vs-batch (cached per
-    # (config, max_len) key — a second construction reuses the fit)
-    dm = DemandModel.from_model_config(cfg, args.max_len)
-    fn = dm.primary_fn
-    demand = ServingDemand.from_demand_model(dm, args.max_len)
+    # the kv-growth estimator two-point-calibrates footprint-vs-batch
+    # (cached per (config, max_len) key — a second construction reuses
+    # the fit)
+    estimate = get_estimator("kv-growth").estimate(
+        ModelTarget(cfg, args.max_len))
+    fn = estimate.primary_fn
+    demand = ServingDemand.from_estimate(estimate, args.max_len)
     print(f"footprint(batch) ~= {fn.m:.4f} + {fn.b:.5f} GB/slot "
           f"(calibrated at batch 2,4) -> {demand.kv_gb_per_token * 2**20:.2f} "
           f"KiB KV per token per request")

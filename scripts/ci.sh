@@ -3,13 +3,16 @@
 # regression (hypothesis import killing collection; >2 min runs) cannot
 # silently come back.  After the fast pytest selection, a tiny --smoke
 # benchmark pass exercises the bench plumbing end-to-end (including the
-# multi-axis vector-admission scenario and the continuous-vs-wave
-# serving sweep, which asserts continuous >= wave goodput) inside the
-# SAME wall-clock cap.
+# multi-axis vector-admission scenario, the net-binding-axis scenario,
+# and the continuous-vs-wave serving sweep, which asserts continuous >=
+# wave goodput), once per demand estimator in $CI_SMOKE_ESTIMATORS
+# (default: the default wrap + the conservative registry entry), all
+# inside the SAME wall-clock cap.
 #
 #   scripts/ci.sh            # fast selection + smoke, <= $CI_TIMEOUT_S (120)
 #   CI_FULL=1 scripts/ci.sh  # full suite incl. @slow tier-2 (longer cap)
 #   CI_SMOKE_BENCHES="..."   # override the smoke bench subset ("" skips)
+#   CI_SMOKE_ESTIMATORS="..."  # override the --estimator sweep
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -45,24 +48,31 @@ if [ $rc -eq 124 ]; then
 fi
 [ $rc -ne 0 ] && exit $rc
 
-# Smoke benchmarks ride the remaining budget of the same cap.
+# Smoke benchmarks ride the remaining budget of the same cap, swept
+# across demand estimators (the moe pass IS the default wrap; the
+# conservative pass drives OURS through the registry's no-selector
+# fallback estimator end-to-end).
+CI_SMOKE_ESTIMATORS="${CI_SMOKE_ESTIMATORS-moe conservative}"
 if [ -n "$CI_SMOKE_BENCHES" ]; then
-    REMAIN_S=$(( CI_TIMEOUT_S - (SECONDS - START_S) ))
-    if [ "$REMAIN_S" -lt 10 ]; then
-        echo "ci: FAILED — no budget left for smoke benchmarks" \
-             "(${REMAIN_S}s of ${CI_TIMEOUT_S}s)" >&2
-        exit 1
-    fi
-    echo "ci: running smoke benchmarks (${REMAIN_S}s left):" \
-         "$CI_SMOKE_BENCHES"
-    # shellcheck disable=SC2086
-    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-        timeout --signal=TERM --kill-after=15 "$REMAIN_S" \
-        "$PYTHON" -m benchmarks.run --smoke --bench $CI_SMOKE_BENCHES \
-        || rc=$?
-    if [ $rc -eq 124 ]; then
-        echo "ci: FAILED — smoke benchmarks exceeded the remaining" \
-             "${REMAIN_S}s budget" >&2
-    fi
+    for EST in $CI_SMOKE_ESTIMATORS; do
+        REMAIN_S=$(( CI_TIMEOUT_S - (SECONDS - START_S) ))
+        if [ "$REMAIN_S" -lt 10 ]; then
+            echo "ci: FAILED — no budget left for smoke benchmarks" \
+                 "(${REMAIN_S}s of ${CI_TIMEOUT_S}s)" >&2
+            exit 1
+        fi
+        echo "ci: running smoke benchmarks (--estimator $EST," \
+             "${REMAIN_S}s left): $CI_SMOKE_BENCHES"
+        # shellcheck disable=SC2086
+        PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+            timeout --signal=TERM --kill-after=15 "$REMAIN_S" \
+            "$PYTHON" -m benchmarks.run --smoke --estimator "$EST" \
+            --bench $CI_SMOKE_BENCHES || rc=$?
+        if [ $rc -eq 124 ]; then
+            echo "ci: FAILED — smoke benchmarks exceeded the remaining" \
+                 "${REMAIN_S}s budget" >&2
+        fi
+        [ $rc -ne 0 ] && exit $rc
+    done
 fi
 exit $rc

@@ -28,6 +28,15 @@ from repro.core.workloads import AppProfile
 PROFILE_SIZES = (0.3, 3.0, 30.0, 100.0, 300.0, 1000.0)  # M-items sweep
 
 
+def calibration_points(total_items: float) -> np.ndarray:
+    """The runtime calibration sizes (paper Section 4.1): the ~100MB
+    feature-extraction probe plus the 5% and 10% runs.  Shared with
+    ``repro.sched.estimator`` so predicted side-car curves are probed at
+    exactly the same input sizes as the primary memory curve."""
+    return np.asarray([min(0.1, 0.01 * total_items),
+                       0.05 * total_items, 0.10 * total_items])
+
+
 def profile_curve(app: AppProfile, rng: np.random.Generator,
                   sizes: Sequence[float] = PROFILE_SIZES
                   ) -> Tuple[np.ndarray, np.ndarray]:
@@ -166,9 +175,7 @@ class MoEPredictor:
         (two knee-region points alone extrapolate poorly; measured:
         large exp-saturation jobs over-provisioned ~2x at chunk scale)."""
         fam, dist, confident = self.select_family(app.features)
-        x0 = min(0.1, 0.01 * total_items)         # the feature probe
-        x1, x2 = 0.05 * total_items, 0.10 * total_items
-        xs = np.asarray([x0, x1, x2])
+        xs = calibration_points(total_items)
         ys = np.asarray([app.measure(x, rng) for x in xs])
         fn = experts.fit(fam, xs, ys)
         info = {"family": fam, "distance": dist, "confident": confident,

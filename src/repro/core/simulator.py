@@ -33,6 +33,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import os
+import warnings
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
@@ -41,7 +42,8 @@ import numpy as np
 from repro.core.experts import MemoryFunction
 from repro.core.workloads import AppProfile
 # resources/placement are import-cycle-free (they never import
-# repro.core); admission is NOT — see the lazy import in Policy.__init__
+# repro.core); admission/estimator are NOT — see the lazy imports in
+# Policy.__init__ / Policy.bind
 from repro.sched.placement import get_placement
 from repro.sched.resources import DemandModel, ResourceVector
 
@@ -49,6 +51,7 @@ if TYPE_CHECKING:  # runtime import is lazy: repro.sched.admission
     # imports repro.core (experts), so importing it back at module
     # scope would be circular when repro.sched loads first
     from repro.sched.admission import AdmissionController
+    from repro.sched.estimator import DemandEstimate
 
 
 def _default_placement() -> str:
@@ -56,6 +59,13 @@ def _default_placement() -> str:
     # for every SimConfig a bench module builds, without threading an
     # argument through each of them
     return os.environ.get("REPRO_PLACEMENT", "fcfs")
+
+
+def _default_estimator() -> str:
+    # benchmarks/run.py --estimator sweeps the demand estimator the same
+    # way; "" means "wrap the policy's own predictor" (the faithful
+    # bit-identical default)
+    return os.environ.get("REPRO_ESTIMATOR", "")
 
 
 @dataclass
@@ -100,6 +110,12 @@ class SimConfig:
     extra_capacity: Dict[str, float] = field(default_factory=dict)
     # queue-ordering / host-scan policy (repro.sched.placement registry)
     placement: str = field(default_factory=_default_placement)
+    # demand estimator (repro.sched.estimator registry: moe / oracle /
+    # single-family / ann / conservative) for estimator-sweepable
+    # policies (OURS; baselines keep their defining predictors).
+    # "" = wrap the policy's own predictor — bit-identical to the
+    # pre-estimator behaviour
+    estimator: str = field(default_factory=_default_estimator)
 
     def host_capacity(self) -> ResourceVector:
         """Per-host capacity vector: the primary memory axis, the CPU
@@ -117,6 +133,7 @@ class Job:
     items: float                      # total M-items
     c_iso: float                      # isolated execution time (analytic)
     fn_hat: Optional[MemoryFunction] = None
+    demand_est: Optional["DemandEstimate"] = None  # full multi-axis
     info: Dict = field(default_factory=dict)
     unassigned: float = 0.0
     done: float = 0.0
@@ -190,6 +207,9 @@ class Simulator:
         self.cfg = cfg
         self.rng = np.random.default_rng(seed)
         self.policy = policy
+        bind = getattr(policy, "bind", None)
+        if callable(bind):      # fix the config the policy predicts under
+            bind(cfg)
         capacity = cfg.host_capacity()
         self.hosts = [Host(h, cfg.host_mem_gb, capacity=capacity)
                       for h in range(cfg.n_hosts)]
@@ -259,8 +279,20 @@ class Simulator:
             straggle = self.cfg.straggler_factor
         # full per-axis booking: the primary-axis claim, the executor's
         # average CPU load, and any secondary-axis demand at this split
-        axes = {a: float(fn(items))
-                for a, fn in job.app.aux_demand.items()}
+        # — booked from the PREDICTED side-car curves when the job went
+        # through an estimator (consistent with what admission decided
+        # on), falling back to declared aux curves otherwise.  The
+        # primary-axis-match guard mirrors Policy._demand_model: a job
+        # estimated under a different primary axis was ADMITTED on the
+        # declared curves, so it must book from them too
+        de = job.demand_est
+        if de is not None and \
+                de.model.primary_axis == self.cfg.primary_axis:
+            aux = {a: fn for a, fn in de.model.curves.items()
+                   if a != self.cfg.primary_axis}
+        else:
+            aux = job.app.aux_demand
+        axes = {a: float(fn(items)) for a, fn in aux.items()}
         axes[self.cfg.primary_axis] = mem_claimed
         axes["cpu"] = job.app.cpu_load
         e = Executor(next(self._eid), job, host, items, mem_true,
@@ -420,21 +452,36 @@ class Simulator:
 # ---------------------------------------------------------------------------
 
 class Policy:
-    """Base: predictor-driven co-location (the paper's runtime).
+    """Base: estimator-driven co-location (the paper's runtime).
 
-    Budget-inverse sizing and budget shading are delegated to the shared
+    Demand estimation goes through the ``repro.sched.estimator``
+    registry — selection order: the ``estimator`` constructor argument,
+    else ``SimConfig.estimator``, else the policy's own ``predictor``
+    wrapped in its faithful estimator (bit-identical to the
+    pre-estimator code path).  Budget-inverse sizing and budget shading
+    are delegated to the shared
     :class:`repro.sched.admission.AdmissionController` (the same object
     the serving driver admits request batches through); queue ordering
     and host-scan order come from the ``repro.sched.placement`` registry
     (``cfg.placement``)."""
     name = "base"
     uses_profiling = True
+    #: whether ``SimConfig.estimator`` / ``benchmarks/run.py
+    #: --estimator`` sweeps this policy's estimator.  Only the paper's
+    #: own policy (OURS) is sweepable — baselines (oracle, quasar,
+    #: pairwise, online-search) keep their defining predictors, so a
+    #: sweep compares "OURS under estimator X" against stable baselines.
+    estimator_sweepable = False
 
-    def __init__(self, predictor,
+    def __init__(self, predictor=None,
                  admission: Optional["AdmissionController"] = None,
-                 placement=None):
-        """``placement`` (a name or PlacementPolicy instance) overrides
-        ``SimConfig.placement`` for this policy only."""
+                 placement=None, estimator=None):
+        """``placement`` (a name or PlacementPolicy instance) and
+        ``estimator`` (a name or DemandEstimator instance) override
+        ``SimConfig.placement`` / ``SimConfig.estimator`` for this
+        policy only."""
+        from repro.sched.estimator import resolve_estimator
+        self._owns_admission = admission is None
         if admission is None:
             from repro.sched.admission import AdmissionController
             admission = AdmissionController()
@@ -442,22 +489,69 @@ class Policy:
         self.admission = admission
         self.placement = get_placement(placement) \
             if isinstance(placement, str) else placement
+        self._est_spec = estimator
+        self._est = resolve_estimator(estimator, predictor=predictor)
+        self._cfg: Optional[SimConfig] = None
+
+    def bind(self, cfg: SimConfig) -> None:
+        """Called by the Simulator before the run: fixes the config the
+        policy predicts under (primary axis) and resolves the estimator
+        (ctor arg > ``cfg.estimator`` > wrapped predictor)."""
+        from repro.sched.estimator import resolve_estimator
+        self._cfg = cfg
+        spec = self._est_spec
+        if spec is None and self.estimator_sweepable:
+            spec = cfg.estimator or None
+        self._est = resolve_estimator(spec, predictor=self.predictor)
+        # keep the policy-owned controller's estimator in sync (a
+        # re-bind under a different SimConfig.estimator must not leave
+        # a stale handle); a caller-supplied shared controller is never
+        # clobbered
+        if self._owns_admission:
+            self.admission.estimator = self._est
 
     def _placement(self, cfg: SimConfig):
         return self.placement if self.placement is not None \
             else get_placement(cfg.placement)
 
     def predict(self, job: Job, rng) -> Tuple[MemoryFunction, Dict]:
-        return self.predictor.predict_function(job.app, job.items, rng)
+        """Estimate the job's full multi-axis demand (primary curve +
+        predicted side-cars) and remember it on the job; returns the
+        primary curve + info exactly like the pre-estimator API."""
+        from repro.sched.estimator import JobTarget
+        if self._est is None:                     # bare-predictor legacy
+            return self.predictor.predict_function(job.app, job.items,
+                                                   rng)
+        primary = self._cfg.primary_axis if self._cfg is not None \
+            else "host_ram"
+        est = self._est.estimate(
+            JobTarget(job.app, job.items, primary_axis=primary), rng=rng)
+        job.demand_est = est
+        if est.conservative:
+            job.conservative = True
+        return est.primary_fn, est.info
 
     def _demand_model(self, cfg: SimConfig, job: Job) -> DemandModel:
-        """The job's per-axis demand: the calibrated memory function on
-        the primary axis, the executor's average CPU load as a fixed
-        gate (paper Section 6.8 — moved out of the dispatcher into the
-        controller), plus any secondary-axis curves the workload
-        declares (e.g. host staging RAM for HBM-resident jobs)."""
+        """The job's per-axis demand: the estimated multi-axis model
+        (calibrated primary curve + PREDICTED side-car curves) with the
+        executor's average CPU load as a fixed gate (paper Section 6.8 —
+        moved out of the dispatcher into the controller)."""
+        est = job.demand_est
+        if est is not None and est.model.primary_axis == cfg.primary_axis:
+            return DemandModel(est.model.curves,
+                               fixed={"cpu": job.app.cpu_load},
+                               primary_axis=cfg.primary_axis)
+        # legacy path (no estimate recorded): primary curve + DECLARED
+        # side-car curves — deprecated since the estimator redesign
         curves = {cfg.primary_axis: job.fn_hat}
-        curves.update(job.app.aux_demand)
+        if job.app.aux_demand:
+            warnings.warn(
+                "feeding declared AppProfile.aux_demand curves straight "
+                "into admission is deprecated — route the job through a "
+                "repro.sched.estimator DemandEstimator, which PREDICTS "
+                "the side-car curves from aux probes",
+                DeprecationWarning, stacklevel=2)
+            curves.update(job.app.aux_demand)
         return DemandModel(curves, fixed={"cpu": job.app.cpu_load},
                            primary_axis=cfg.primary_axis)
 
@@ -542,18 +636,20 @@ class Policy:
 
 class OursPolicy(Policy):
     name = "ours"
+    estimator_sweepable = True
 
-    def __init__(self, predictor,
+    def __init__(self, predictor=None,
                  admission: Optional["AdmissionController"] = None,
-                 refresher=None, placement=None):
+                 refresher=None, placement=None, estimator=None):
         """``refresher`` (repro.sched.online.OnlineRefresher) folds each
-        profiled arrival's calibration curve back into the predictor —
-        the open-arrival online-learning loop."""
-        super().__init__(predictor, admission, placement)
+        profiled arrival's calibration curve back into the estimator
+        (``partial_update`` through the registry handle) — the
+        open-arrival online-learning loop."""
+        super().__init__(predictor, admission, placement, estimator)
         self.refresher = refresher
 
     def predict(self, job, rng):
-        fn, info = self.predictor.predict_function(job.app, job.items, rng)
+        fn, info = super().predict(job, rng)
         if not info.get("confident", True):
             job.conservative = True
         if self.refresher is not None and info.get("calib"):

@@ -86,9 +86,13 @@ class AppProfile:
     rate: float                 # M-items / s per executor (unit share)
     features: np.ndarray        # 22-dim raw feature vector
     noise: float = 0.02         # multiplicative measurement noise
-    # secondary-axis demand curves (axis -> units->amount), e.g. host
-    # staging RAM for an HBM-resident TPU job; these are KNOWN resource
-    # models (not predicted) and gate admission via the demand vector
+    # GROUND-TRUTH secondary-axis demand curves (axis -> units->amount),
+    # e.g. host staging RAM or interconnect bandwidth for an
+    # HBM-resident TPU job.  Since the DemandEstimator redesign these
+    # are a measurement source only (``measure_axis``): the runtime
+    # PREDICTS the side-car curves from probes, and feeding declared
+    # curves straight into admission is deprecated (DeprecationWarning
+    # from the legacy path in ``core/simulator.py``).
     aux_demand: Dict[str, MemoryFunction] = field(default_factory=dict)
 
     def measure(self, x: float, rng: Optional[np.random.Generator] = None
@@ -97,6 +101,17 @@ class AppProfile:
         if rng is not None:
             y *= float(1.0 + rng.normal(0, self.noise))
         return max(y, 1e-3)
+
+    def measure_axis(self, axis: str, x: float,
+                     rng: Optional[np.random.Generator] = None) -> float:
+        """Measure a side-car axis at input size ``x`` (the aux-probe
+        counterpart of :meth:`measure`, same noise model).  This is how
+        estimators *predict* aux curves instead of reading the declared
+        ground truth."""
+        y = float(self.aux_demand[axis](x))
+        if rng is not None:
+            y *= float(1.0 + rng.normal(0, self.noise))
+        return max(y, 1e-6)
 
 
 def _make_fn(fam: str, rng: np.random.Generator) -> MemoryFunction:

@@ -14,10 +14,15 @@ would breach the budget.  ``--mode wave`` keeps the pre-engine
 behaviour — one admission per wave against the worst-case footprint —
 for comparison.
 
-Passing ``--host-ram-gb`` adds a second budgeted axis (pinned host
-staging memory per request); the metrics report which axis bound each
-join.  Forced over-budget progress (a single request that does not fit)
-is flagged on the decision and logged, never booked silently.
+The serving footprint comes from the ``repro.sched.estimator`` registry
+(``--estimator kv-growth|conservative``): the ``kv-growth`` estimator
+owns the per-``(config, max_len)`` two-point affine calibration cache;
+``conservative`` pads the KV slope.  Passing ``--host-ram-gb`` adds a
+second budgeted axis (pinned host staging memory per request), and
+``--net-gbps`` a third (egress bandwidth per in-flight request — the
+live ``net`` axis); the metrics report which axis bound each join.
+Forced over-budget progress (a single request that does not fit) is
+flagged on the decision and logged, never booked silently.
 
 Queue order and preemption priority are pluggable via the
 ``repro.sched.placement`` registry (``--placement
@@ -35,8 +40,13 @@ import time
 import numpy as np
 
 from repro.configs import get_config
-from repro.sched import DemandModel, ResourceVector, available_placements
+from repro.sched import (ModelTarget, ResourceVector,
+                         available_placements, get_estimator)
 from repro.serve import Engine, JaxBackend, Request, ServingDemand
+
+#: estimators that make sense for a serving deployment (job-side ones
+#: like moe/oracle need an AppProfile target)
+SERVE_ESTIMATORS = ("kv-growth", "conservative")
 
 
 def build_requests(args, rng: np.random.Generator):
@@ -71,6 +81,14 @@ def main():
                     help="host staging budget (0 = unconstrained)")
     ap.add_argument("--host-ram-per-req-gb", type=float, default=0.05,
                     help="pinned host memory per in-flight request")
+    ap.add_argument("--net-gbps", type=float, default=0.0,
+                    help="egress bandwidth budget (0 = unconstrained)")
+    ap.add_argument("--net-gbps-per-req", type=float, default=0.1,
+                    help="egress bandwidth per in-flight request")
+    ap.add_argument("--estimator", default="kv-growth",
+                    choices=SERVE_ESTIMATORS,
+                    help="demand estimator (repro.sched.estimator "
+                         "registry); conservative pads the KV slope")
     ap.add_argument("--placement", default="fcfs",
                     choices=available_placements(),
                     help="queue order + preemption priority "
@@ -84,14 +102,22 @@ def main():
     cfg = get_config(args.arch, smoke=args.smoke)
     max_len = args.prompt_len + args.decode_steps + 1
 
-    demand_model = DemandModel.from_model_config(
+    estimator = get_estimator(args.estimator)
+    estimate = estimator.estimate(ModelTarget(
         cfg, max_len,
         host_ram_per_req_gb=args.host_ram_per_req_gb
-        if args.host_ram_gb > 0.0 else 0.0)
-    demand = ServingDemand.from_demand_model(demand_model, max_len)
+        if args.host_ram_gb > 0.0 else 0.0,
+        net_gbps_per_req=args.net_gbps_per_req
+        if args.net_gbps > 0.0 else 0.0))
+    if estimate.conservative:
+        print(f"estimator {args.estimator!r}: conservative estimate "
+              f"(KV slope padded x{estimate.info.get('pad')})")
+    demand = ServingDemand.from_estimate(estimate, max_len)
     budget_axes = {"hbm": float(args.budget_gb)}
     if args.host_ram_gb > 0.0:
         budget_axes["host_ram"] = float(args.host_ram_gb)
+    if args.net_gbps > 0.0:
+        budget_axes["net"] = float(args.net_gbps)
     budget = ResourceVector(**budget_axes)
 
     rng = np.random.default_rng(args.seed)
@@ -100,7 +126,9 @@ def main():
     engine = Engine(requests, demand, budget, backend, mode=args.mode,
                     placement=args.placement, max_batch=args.max_batch)
 
-    axes = ", ".join(f"{a}={v:.3g}GB" for a, v in budget.items())
+    axes = ", ".join(
+        f"{a}={v:.3g}" + ("Gbps" if a == "net" else "GB")
+        for a, v in budget.items())
     print(f"serving {args.requests} requests, mode={args.mode}, "
           f"placement={args.placement}, budget [{axes}]")
     t0 = time.time()

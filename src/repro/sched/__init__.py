@@ -1,7 +1,15 @@
 """Online scheduling subsystem: the paper's runtime, factored out.
 
-Five parts, shared by the cluster simulator (``core/simulator.py``) and
+Six parts, shared by the cluster simulator (``core/simulator.py``) and
 the serving driver (``launch/serve.py``):
+
+* ``estimator``  — :class:`DemandEstimator` registry (``moe`` /
+  ``oracle`` / ``single-family`` / ``ann`` / ``conservative`` /
+  ``kv-growth``): ONE ``estimate(target, probes) -> DemandEstimate``
+  entry point producing the full multi-axis demand model (predicted
+  side-car curves included) with per-axis confidence and the
+  conservative-fallback flag.  Selectable via ``SimConfig.estimator``,
+  ``benchmarks/run.py --estimator``, ``launch/serve.py --estimator``.
 
 * ``resources``  — :class:`ResourceVector` (named axes ``host_ram`` /
   ``cpu`` / ``hbm`` / ``net`` with ``+``/``-``/``fits``/``headroom``
@@ -35,6 +43,17 @@ from repro.sched.resources import (  # noqa: F401
 from repro.sched.admission import (  # noqa: F401
     AdmissionController,
     AdmissionDecision,
+)
+from repro.sched.estimator import (  # noqa: F401
+    DemandEstimate,
+    DemandEstimator,
+    JobTarget,
+    ModelTarget,
+    available_estimators,
+    get_estimator,
+    register_estimator,
+    resolve_estimator,
+    wrap_predictor,
 )
 from repro.sched.placement import (  # noqa: F401
     PlacementPolicy,

@@ -11,11 +11,16 @@ generalized from a single scalar GB budget to a
 the **min over per-axis inverses** of a :class:`DemandModel`, and the
 decision records which axis bound it.
 
-The original scalar API is a thin shim: ``admit(fn, budget_gb)`` wraps
-the curve in a single-axis demand model and the float in a single-axis
-budget vector, and takes exactly the same code path — results are
-bit-identical to the pre-vector controller (pinned by
-``tests/test_resources.py``).
+Since the DemandEstimator redesign the controller is built AROUND an
+estimator instance (``repro.sched.estimator`` registry): ``estimate()``
+produces the full multi-axis :class:`DemandModel` (with per-axis
+confidence and the conservative flag) and ``admit_target()`` runs
+estimate -> shade -> binding-axis inverse in one call.  The per-call
+curve/scalar APIs below (``admit(fn, budget_gb)``, ``calibrate``) are
+DEPRECATED shims kept bit-identical to the PR 2/3 paths: a bare curve
+becomes a single-axis demand model, a bare float a single-axis budget
+vector, and the same code path runs (goldens pinned by
+``tests/test_resources.py`` / ``tests/test_estimator.py``).
 
 Units are deliberately abstract ("units" = M-items for Spark jobs,
 concurrent requests for the serving batch) — the controller only cares
@@ -60,27 +65,60 @@ class AdmissionController:
 
     def __init__(self, safety_margin: float = 0.0,
                  conservative_factor: float = 0.5,
-                 oom_backoff: float = 0.5, max_oom_shifts: int = 3):
+                 oom_backoff: float = 0.5, max_oom_shifts: int = 3,
+                 estimator=None):
+        """``estimator`` — a :class:`~repro.sched.estimator.
+        DemandEstimator` instance or registry name; when set,
+        :meth:`estimate` / :meth:`admit_target` run the full
+        predict -> multi-axis-demand -> binding-axis-inverse pipeline
+        through it."""
         self.safety_margin = float(safety_margin)
         self.conservative_factor = float(conservative_factor)
         self.oom_backoff = float(oom_backoff)
         self.max_oom_shifts = int(max_oom_shifts)
+        if estimator is not None:
+            from repro.sched.estimator import resolve_estimator
+            estimator = resolve_estimator(estimator)
+        self.estimator = estimator
 
-    # --- calibration -----------------------------------------------------
+    # --- the estimator pipeline ------------------------------------------
+    def estimate(self, target, probes=None, *, rng=None):
+        """Predicted multi-axis demand for ``target`` via the attached
+        estimator (see ``repro.sched.estimator``)."""
+        if self.estimator is None:
+            raise RuntimeError(
+                "this AdmissionController has no estimator attached — "
+                "construct it with estimator=<instance or registry name>")
+        return self.estimator.estimate(target, probes, rng=rng)
+
+    def admit_target(self, target, free: Union[float, ResourceVector], *,
+                     probes=None, rng=None, cap: float = np.inf,
+                     floor: float = 0.0, book: bool = True,
+                     safety_margin: Optional[float] = None,
+                     oom_count: int = 0,
+                     info: Optional[Dict] = None) -> AdmissionDecision:
+        """The one-call pipeline: estimate the target's multi-axis
+        demand, shade the free capacity by the scheduler's risk rules
+        (the estimate's conservative flag drives the low-confidence
+        fallback), and invert along the binding axis."""
+        est = self.estimate(target, probes, rng=rng)
+        budget = self.effective_budget(
+            free, safety_margin=safety_margin,
+            conservative=est.conservative, oom_count=oom_count)
+        merged = {"estimate": est, **(info or {})}
+        return self.admit(est.model, budget, cap=cap, floor=floor,
+                          book=book, info=merged)
+
+    # --- calibration (deprecated shim) -----------------------------------
     def calibrate(self, family: str,
                   probes: Sequence[Tuple[float, float]]) -> MemoryFunction:
-        """Instantiate (m, b) from measured (x, y) probes.
-
-        Two probes use the paper's exact two-point solve; more probes fall
-        back to the least-squares fit (same families, same guards)."""
-        probes = sorted((float(x), float(y)) for x, y in probes)
-        if len(probes) < 2:
-            raise ValueError("calibration needs at least two probes")
-        if len(probes) == 2:
-            (x1, y1), (x2, y2) = probes
-            return experts.calibrate_two_point(family, x1, y1, x2, y2)
-        xs, ys = zip(*probes)
-        return experts.fit(family, xs, ys)
+        """DEPRECATED shim: estimators calibrate via ``estimate(target,
+        probes)`` now; this delegates to the same implementation.
+        Instantiate (m, b) from measured (x, y) probes — two probes use
+        the paper's exact two-point solve, more fall back to the
+        least-squares fit (same families, same guards)."""
+        from repro.sched.estimator import _fit_probes
+        return _fit_probes(family, probes)
 
     # --- budget shading --------------------------------------------------
     def effective_budget(self, free: Union[float, ResourceVector], *,

@@ -28,9 +28,17 @@ from repro.core import experts
 
 @dataclass
 class OnlineRefresher:
-    """Streams (features, probe curve) observations into a fitted
-    MoEPredictor."""
-    predictor: object                  # MoEPredictor (duck-typed)
+    """Streams (features, probe curve) observations into an estimator.
+
+    ``predictor`` is duck-typed against the
+    :class:`~repro.sched.estimator.DemandEstimator` protocol surface
+    (``families``, ``select_family``, ``partial_update``) — pass the
+    registry handle (e.g. ``get_estimator("moe", predictor=moe)``)
+    rather than reaching into ``MoEPredictor`` internals; a bare fitted
+    ``MoEPredictor`` still works.  Estimators that do not learn online
+    return ``False`` from ``partial_update`` and the offer is counted
+    as rejected."""
+    predictor: object                  # DemandEstimator / MoEPredictor
     max_error: float = 0.05            # accept only clean family fits
     ambiguity_ratio: float = 2.0       # runner-up must be this much worse
     min_probes: int = 3
@@ -62,7 +70,10 @@ class OnlineRefresher:
         features = np.asarray(features, float)
         if self.only_unconfident:
             if confident is None:
-                _, _, confident = self.predictor.select_family(features)
+                sel = getattr(self.predictor, "select_family", None)
+                # estimators without a selector have no confidence
+                # signal — treat the arrival as unconfident (offer it)
+                confident = sel(features)[2] if sel is not None else False
             if confident:
                 self.rejected += 1
                 return None

@@ -141,12 +141,6 @@ def single_axis(axis: str, value: float) -> ResourceVector:
     return ResourceVector(**{axis: value})
 
 
-#: (config name, max_len) -> calibrated affine footprint-vs-batch fit.
-#: See :meth:`DemandModel.from_model_config` — the fit only depends on
-#: the abstract parameter/cache shapes, so reuse is exact.
-_FOOTPRINT_CACHE: Dict[Tuple[str, int], object] = {}
-
-
 class DemandModel:
     """Per-axis demand as a function of admitted work units.
 
@@ -189,48 +183,26 @@ class DemandModel:
     def from_model_config(cls, cfg, max_len: int, *,
                           host_ram_per_req_gb: float = 0.0,
                           refit: bool = False) -> "DemandModel":
-        """The serving footprint as a demand model: probe the model's
-        abstract weights + KV cache at batch 2 and 4, two-point-solve the
-        affine footprint-vs-batch curve (intercept = weights GB, slope =
-        KV GB per request at ``max_len``), and put it on the ``hbm``
-        axis — with an optional per-request pinned host-staging curve on
-        ``host_ram``.
+        """DEPRECATED shim over the ``kv-growth`` estimator (which now
+        owns the per-``(config, max_len)`` calibration cache) — kept
+        bit-identical for existing callers.  Prefer::
 
-        The calibration is pure in ``(cfg.name, max_len)``, so it is
-        cached per config key: repeated engine/CLI/demo constructions
-        reuse the fit instead of silently re-probing the model, and a
-        one-line note says which happened.  ``refit=True`` bypasses the
-        cache (e.g. after editing a config in-process).
+            get_estimator("kv-growth").estimate(
+                ModelTarget(cfg, max_len, ...)).model
         """
-        # runtime-only imports: this module must stay loadable before
-        # repro.core / repro.models (see module docstring)
-        from repro.core.experts import MemoryFunction, calibrate_two_point
-        from repro.models import model as model_lib
-        from repro.utils.tree import tree_bytes
-
-        key = (getattr(cfg, "name", repr(cfg)), int(max_len))
-        fn = None if refit else _FOOTPRINT_CACHE.get(key)
-        if fn is None:
-            def fp(batch: int) -> float:
-                w = tree_bytes(model_lib.abstract(cfg))
-                c = model_lib.init_cache(cfg, batch, int(max_len),
-                                         abstract_only=True)
-                return (w + tree_bytes(c)) / 2 ** 30
-            fn = calibrate_two_point("affine", 2, fp(2), 4, fp(4))
-            _FOOTPRINT_CACHE[key] = fn
-            print(f"footprint calibration: fit {key[0]}@{max_len} "
-                  f"(weights {fn.m:.4f} GB + {fn.b:.5f} GB/slot)")
-        else:
-            print(f"footprint calibration: reused cached fit for "
-                  f"{key[0]}@{max_len}")
-        curves: Dict[str, "MemoryFunction"] = {"hbm": fn}
-        if host_ram_per_req_gb > 0.0:
-            # pinned host staging per in-flight request (I/O buffers,
-            # token queues) — a second budgeted axis that can bind
-            # before HBM
-            curves["host_ram"] = MemoryFunction(
-                "affine", 0.0, float(host_ram_per_req_gb))
-        return cls(curves, primary_axis="hbm")
+        import warnings
+        warnings.warn(
+            "DemandModel.from_model_config is deprecated; use "
+            "repro.sched.estimator.get_estimator('kv-growth')"
+            ".estimate(ModelTarget(cfg, max_len, ...)) instead",
+            DeprecationWarning, stacklevel=2)
+        # runtime-only import: this module must stay loadable before
+        # repro.core (see module docstring)
+        from repro.sched.estimator import KVGrowthEstimator, ModelTarget
+        est = KVGrowthEstimator(refit=refit)
+        target = ModelTarget(cfg, int(max_len),
+                             host_ram_per_req_gb=host_ram_per_req_gb)
+        return est.estimate(target).model
 
     @property
     def primary_fn(self) -> Optional["MemoryFunction"]:

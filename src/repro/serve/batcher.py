@@ -79,11 +79,13 @@ class PrefixCurve:
 
 @dataclass
 class ServingDemand:
-    """Per-request serving footprint derived from a calibrated
-    :class:`DemandModel` (``DemandModel.from_model_config``): the affine
-    footprint-vs-batch fit at ``max_len`` gives weights (intercept,
-    amortized across the batch) and KV at full length (slope), from which
-    the per-token KV slice follows."""
+    """Per-request serving footprint derived from a calibrated demand
+    model (the ``kv-growth`` estimator in ``repro.sched.estimator``):
+    the affine footprint-vs-batch fit at ``max_len`` gives weights
+    (intercept, amortized across the batch) and KV at full length
+    (slope), from which the per-token KV slice follows.  ``extra_axes``
+    carries any other per-request side-car constants (e.g. ``net``
+    egress bandwidth) the estimate predicted."""
 
     weights_gb: float           # resident once, however many requests
     kv_gb_per_token: float      # per request, per context token
@@ -96,13 +98,31 @@ class ServingDemand:
         fn = dm.primary_fn
         if fn is None or getattr(fn, "family", None) != "affine":
             raise ValueError(
-                "ServingDemand needs an affine footprint-vs-batch fit on "
-                "the primary axis (DemandModel.from_model_config)")
+                "ServingDemand needs an affine footprint-vs-batch fit "
+                "on the primary axis (the kv-growth estimator)")
         host = dm.curves.get("host_ram")
+        extra = {a: float(c.b) for a, c in dm.curves.items()
+                 if a not in (dm.primary_axis, "host_ram")}
         return cls(weights_gb=float(fn.m),
                    kv_gb_per_token=float(fn.b) / float(max_len),
                    host_ram_per_req_gb=float(host.b)
-                   if host is not None else 0.0)
+                   if host is not None else 0.0,
+                   extra_axes=extra)
+
+    @classmethod
+    def from_estimate(cls, estimate, max_len: int) -> "ServingDemand":
+        """Build from a :class:`~repro.sched.estimator.DemandEstimate`
+        (the registry path: ``get_estimator("kv-growth").estimate(
+        ModelTarget(cfg, max_len, ...))``)."""
+        return cls.from_demand_model(estimate.model, max_len)
+
+    def per_request_axes(self) -> Dict[str, float]:
+        """Per-request side-car constants on every non-KV axis (what a
+        request pins regardless of its context length)."""
+        axes = dict(self.extra_axes)
+        if self.host_ram_per_req_gb > 0.0:
+            axes["host_ram"] = self.host_ram_per_req_gb
+        return axes
 
     def request_vector(self, req: Request, extra_tokens: int = 0
                        ) -> ResourceVector:
@@ -250,13 +270,14 @@ class ContinuousBatcher:
         """Marginal demand of admitting the first ``u`` ordered
         candidates, as per-axis prefix curves the controller can invert.
         Joiners are charged their full post-step context: the prefill
-        emits one token and the decode step a second."""
+        emits one token and the decode step a second.  Every per-request
+        side-car axis (host staging RAM, net egress) joins as a linear
+        curve so it can bind the inverse too."""
         curves: Dict[str, object] = {"hbm": PrefixCurve(
             [self.demand.kv_gb_per_token * (r.context_len + 2)
              for r in cands])}
-        if self.demand.host_ram_per_req_gb > 0.0:
-            curves["host_ram"] = MemoryFunction(
-                "affine", 0.0, self.demand.host_ram_per_req_gb)
+        for axis, per_req in self.demand.per_request_axes().items():
+            curves[axis] = MemoryFunction("affine", 0.0, per_req)
         return DemandModel(curves, primary_axis="hbm")
 
     def _violated(self, running: Sequence[Request],

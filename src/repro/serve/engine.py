@@ -188,9 +188,8 @@ class Engine:
         curves = {"hbm": MemoryFunction(
             "affine", self.demand.weights_gb,
             self.demand.kv_gb_per_token * lmax)}
-        if self.demand.host_ram_per_req_gb > 0.0:
-            curves["host_ram"] = MemoryFunction(
-                "affine", 0.0, self.demand.host_ram_per_req_gb)
+        for axis, per_req in self.demand.per_request_axes().items():
+            curves[axis] = MemoryFunction("affine", 0.0, per_req)
         dm = DemandModel(curves, primary_axis="hbm")
         return self.controller.admit_batch(
             dm, self.budget, min_batch=1,

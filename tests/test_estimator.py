@@ -1,0 +1,450 @@
+"""The unified DemandEstimator API (repro/sched/estimator.py).
+
+Three layers of coverage:
+
+* registry round-trip + protocol surface for every implementation;
+* per-implementation invariants: monotone demand curves, inverse
+  consistency (the admitted units' demand fits the budget that admitted
+  them), predicted side-car curves close to ground truth;
+* golden back-compat pins: the deprecated per-call shims — predictor
+  wrapping, ``DemandModel.from_model_config``, and the simulator's
+  scalar path — stay bit-identical to the PR 2/3 behaviour.
+"""
+import copy
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import MoEPredictor, spark_sim_suite, training_apps
+from repro.core.experts import MemoryFunction
+from repro.core.predictor import (OraclePredictor, UnifiedFamilyPredictor,
+                                  calibration_points)
+from repro.core.simulator import OursPolicy, SimConfig, Simulator
+from repro.sched import (DemandEstimate, DemandEstimator, JobTarget,
+                         ModelTarget, OnlineRefresher, ResourceVector,
+                         available_estimators, get_estimator,
+                         register_estimator, resolve_estimator,
+                         wrap_predictor)
+from repro.sched.estimator import _REGISTRY, PredictorEstimator
+
+JOB_ESTIMATORS = ("moe", "oracle", "single-family", "conservative")
+
+
+@pytest.fixture(scope="module")
+def suite():
+    apps = spark_sim_suite()
+    moe = MoEPredictor().fit(training_apps(apps))
+    return apps, moe
+
+
+def _est(name, moe):
+    return get_estimator(name, predictor=moe)
+
+
+# --- registry ---------------------------------------------------------------
+
+def test_registry_round_trip(suite):
+    apps, moe = suite
+    assert set(available_estimators()) >= {
+        "moe", "oracle", "single-family", "ann", "conservative",
+        "kv-growth"}
+    for name in JOB_ESTIMATORS:
+        est = _est(name, moe)
+        assert isinstance(est, DemandEstimator)
+        assert est.name == name
+        de = est.estimate(JobTarget(apps[0], 30.0),
+                          rng=np.random.default_rng(0))
+        assert isinstance(de, DemandEstimate)
+        assert de.primary_fn is not None
+        assert set(de.confidence) == set(de.model.curves.axes
+                                         if hasattr(de.model.curves,
+                                                    "axes")
+                                         else de.model.curves)
+    with pytest.raises(KeyError):
+        get_estimator("no-such-estimator")
+    with pytest.raises(ValueError):
+        get_estimator("moe")          # needs a fitted predictor
+    with pytest.raises(ValueError):
+        get_estimator("ann")          # needs a fitted ANNPredictor
+
+
+def test_register_estimator_extension_point(suite):
+    apps, _ = suite
+
+    @register_estimator("_test-flat")
+    class _Flat(DemandEstimator):
+        def __init__(self, predictor=None):
+            pass
+
+        def estimate(self, target, probes=None, *, rng=None):
+            from repro.sched.resources import DemandModel
+            fn = MemoryFunction("affine", 1.0, 0.0)
+            return DemandEstimate(
+                DemandModel({target.primary_axis: fn},
+                            primary_axis=target.primary_axis),
+                {target.primary_axis: 1.0}, False, {})
+    try:
+        assert "_test-flat" in available_estimators()
+        de = get_estimator("_test-flat").estimate(JobTarget(apps[0], 1.0))
+        assert de.primary_fn(5.0) == 1.0
+    finally:
+        _REGISTRY.pop("_test-flat", None)
+
+
+def test_wrap_predictor_mapping(suite):
+    _, moe = suite
+    assert wrap_predictor(moe).name == "moe"
+    assert wrap_predictor(OraclePredictor()).name == "oracle"
+    sf = wrap_predictor(UnifiedFamilyPredictor("log"))
+    assert sf.name == "single-family" and sf.family == "log"
+    assert wrap_predictor(None) is None
+    est = _est("moe", moe)
+    assert wrap_predictor(est) is est            # instances pass through
+    assert resolve_estimator(est) is est
+    assert resolve_estimator("oracle").name == "oracle"
+    assert resolve_estimator(None, predictor=moe).name == "moe"
+
+    class _Duck:
+        def predict_function(self, app, items, rng):
+            return MemoryFunction("affine", 0.0, 1.0), {}
+    assert isinstance(wrap_predictor(_Duck()), PredictorEstimator)
+    with pytest.raises(TypeError):
+        wrap_predictor(object())
+
+
+# --- golden shims: bit-identical to the pre-estimator paths ----------------
+
+def test_moe_estimate_bit_identical_to_predict_function(suite):
+    """The moe estimator's primary curve IS predict_function: same RNG
+    draws, same family selection, same calibrated (m, b), same info."""
+    apps, moe = suite
+    for i in (0, 7, 19, 30):
+        fn, info = moe.predict_function(apps[i], 1000.0,
+                                        np.random.default_rng(i))
+        de = _est("moe", moe).estimate(JobTarget(apps[i], 1000.0),
+                                       rng=np.random.default_rng(i))
+        assert de.primary_fn.family == fn.family
+        assert (de.primary_fn.m, de.primary_fn.b) == (fn.m, fn.b)
+        assert de.info == info
+        assert de.conservative == (not info["confident"])
+
+
+def test_single_family_bit_identical_to_unified_predictor(suite):
+    apps, _ = suite
+    pred = UnifiedFamilyPredictor("exp_saturation")
+    fn, _ = pred.predict_function(apps[3], 500.0,
+                                  np.random.default_rng(2))
+    de = get_estimator("single-family",
+                       family="exp_saturation").estimate(
+        JobTarget(apps[3], 500.0), rng=np.random.default_rng(2))
+    assert (de.primary_fn.family, de.primary_fn.m, de.primary_fn.b) \
+        == (fn.family, fn.m, fn.b)
+
+
+def test_simulator_default_equals_explicit_moe(suite):
+    """SimConfig.estimator='moe' through the registry is bit-identical
+    to the default predictor wrap (the pre-redesign path)."""
+    apps, moe = suite
+    jobs = [(apps[i], 30.0) for i in (0, 5, 11, 17)]
+    base = Simulator(jobs, OursPolicy(moe), SimConfig(n_hosts=4),
+                     seed=1).run()
+    via_cfg = Simulator(jobs, OursPolicy(moe),
+                        SimConfig(n_hosts=4, estimator="moe"),
+                        seed=1).run()
+    via_ctor = Simulator(jobs, OursPolicy(estimator=_est("moe", moe)),
+                         SimConfig(n_hosts=4), seed=1).run()
+    for r in (via_cfg, via_ctor):
+        assert r["stp"] == base["stp"]
+        assert r["antt"] == base["antt"]
+        assert r["binding_axes"] == base["binding_axes"]
+
+
+def test_simulator_conservative_estimator_halves_admissions(suite):
+    """The conservative registry entry actually changes scheduling:
+    every job is flagged conservative -> memory budgets halve."""
+    apps, moe = suite
+    # large inputs so memory (not the chunk cap) binds admissions —
+    # halved budgets then genuinely change the schedule
+    jobs = [(apps[i], 1000.0) for i in (0, 5, 11, 17)]
+    base = Simulator(jobs, OursPolicy(moe), SimConfig(n_hosts=4),
+                     seed=1).run()
+    cons = Simulator(jobs, OursPolicy(moe),
+                     SimConfig(n_hosts=4, estimator="conservative"),
+                     seed=1).run()
+    assert cons["stp"] != base["stp"]
+    sim = Simulator(jobs, OursPolicy(moe),
+                    SimConfig(n_hosts=4, estimator="conservative"),
+                    seed=1)
+    sim.run()
+    assert all(j.conservative for j in sim.jobs)
+
+
+def test_from_model_config_shim_matches_kv_growth_estimator():
+    from repro.configs import get_config
+    from repro.sched.resources import DemandModel
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    de = get_estimator("kv-growth").estimate(
+        ModelTarget(cfg, 48, host_ram_per_req_gb=0.02))
+    with pytest.warns(DeprecationWarning):
+        dm = DemandModel.from_model_config(cfg, 48,
+                                           host_ram_per_req_gb=0.02)
+    assert (dm.primary_fn.m, dm.primary_fn.b) \
+        == (de.primary_fn.m, de.primary_fn.b)
+    assert dm.curves["host_ram"].b == de.model.curves["host_ram"].b
+    # ServingDemand built from the estimate == built from the shim
+    from repro.serve import ServingDemand
+    a = ServingDemand.from_estimate(de, 48)
+    b = ServingDemand.from_demand_model(dm, 48)
+    assert (a.weights_gb, a.kv_gb_per_token, a.host_ram_per_req_gb) \
+        == (b.weights_gb, b.kv_gb_per_token, b.host_ram_per_req_gb)
+
+
+def test_conservative_serving_estimate_pads_kv_slope():
+    from repro.configs import get_config
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    exact = get_estimator("kv-growth").estimate(ModelTarget(cfg, 48))
+    padded = get_estimator("conservative").estimate(ModelTarget(cfg, 48))
+    assert padded.conservative and not exact.conservative
+    assert padded.primary_fn.m == exact.primary_fn.m     # weights exact
+    assert padded.primary_fn.b == pytest.approx(
+        exact.primary_fn.b * 1.25)                       # KV padded
+    from repro.serve import ServingDemand
+    assert ServingDemand.from_estimate(padded, 48).kv_gb_per_token \
+        > ServingDemand.from_estimate(exact, 48).kv_gb_per_token
+
+
+def test_serving_net_axis_flows_into_demand():
+    from repro.configs import get_config
+    from repro.serve import ServingDemand
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    de = get_estimator("kv-growth").estimate(
+        ModelTarget(cfg, 48, net_gbps_per_req=0.25))
+    assert de.model.curves["net"].b == 0.25
+    sd = ServingDemand.from_estimate(de, 48)
+    assert sd.extra_axes == {"net": 0.25}
+    assert sd.per_request_axes() == {"net": 0.25}
+    vec = sd.request_vector(_req(), 0)
+    assert vec["net"] == 0.25
+
+
+def _req():
+    from repro.serve import Request
+    return Request(rid=0, prompt_len=4, max_new_tokens=4)
+
+
+# --- invariants per implementation -----------------------------------------
+
+STAGED_AUX = {"host_ram": MemoryFunction("affine", 0.2, 0.4),
+              "net": MemoryFunction("affine", 0.1, 1.5)}
+
+
+def _staged_app(apps, i=0):
+    from dataclasses import replace
+    return replace(apps[i], aux_demand=dict(STAGED_AUX))
+
+
+@pytest.mark.parametrize("name", JOB_ESTIMATORS)
+def test_estimate_monotone_and_inverse_consistent(suite, name):
+    """Every implementation's demand model is monotone in units, and
+    inverting a budget yields units whose demand fits that budget."""
+    apps, moe = suite
+    app = _staged_app(apps, 5)
+    est = _est(name, moe)
+    de = est.estimate(JobTarget(app, 1000.0, primary_axis="hbm"),
+                      rng=np.random.default_rng(3))
+    model = de.model
+    assert model.primary_axis == "hbm"
+    assert {"host_ram", "net"} <= set(model.curves)
+    grid = np.linspace(1.0, 120.0, 8)
+    for a, fn in model.curves.items():
+        ys = [float(fn(x)) for x in grid]
+        assert all(y2 >= y1 - 1e-9 for y1, y2 in zip(ys, ys[1:])), a
+    budget = ResourceVector(hbm=200.0, host_ram=12.0, net=30.0)
+    units, axis = model.inverse(budget)
+    assert np.isfinite(units) and units > 0
+    assert axis in budget
+    assert model.demand(units).fits(budget, eps=1e-6)
+
+
+@pytest.mark.parametrize("name", JOB_ESTIMATORS)
+def test_estimate_with_probes_skips_measurement(suite, name):
+    """Passing measured probes calibrates from them — no target
+    measurement, rng unused."""
+    apps, moe = suite
+    est = _est(name, moe)
+    probes = [(5.0, 8.0), (10.0, 11.0), (20.0, 15.0)]
+    de = est.estimate(JobTarget(apps[2], 200.0), probes)
+    if name == "oracle":                 # prophetic: ignores probes
+        assert de.primary_fn is apps[2].true_fn
+        return
+    fn = de.primary_fn
+    for x, y in probes:
+        assert float(fn(x)) == pytest.approx(y, rel=0.35)
+
+
+def test_moe_predicts_declared_sidecar_curves(suite):
+    """The moe estimator PREDICTS aux curves from probes: close to the
+    declared ground truth, with net fitted by the linear contention
+    model."""
+    apps, moe = suite
+    app = _staged_app(apps)
+    de = _est("moe", moe).estimate(
+        JobTarget(app, 1000.0, primary_axis="hbm"),
+        rng=np.random.default_rng(0))
+    assert de.model.curves["net"].family == "affine"
+    for axis in ("host_ram", "net"):
+        pred, true = de.model.curves[axis], STAGED_AUX[axis]
+        for x in (10.0, 50.0, 100.0):
+            assert float(pred(x)) == pytest.approx(float(true(x)),
+                                                   rel=0.15)
+        assert de.confidence[axis] > 0.5
+        assert axis in de.info["aux_calib"]
+    # the primary axis never collides with an aux curve
+    assert de.model.primary_axis == "hbm"
+
+
+def test_oracle_uses_ground_truth_everywhere(suite):
+    apps, _ = suite
+    app = _staged_app(apps, 3)
+    de = get_estimator("oracle").estimate(
+        JobTarget(app, 50.0, primary_axis="hbm"))
+    assert de.primary_fn is app.true_fn
+    assert de.model.curves["host_ram"] is app.aux_demand["host_ram"]
+    assert all(c == 1.0 for c in de.confidence.values())
+    assert not de.conservative
+
+
+def test_conservative_always_flags(suite):
+    apps, _ = suite
+    de = get_estimator("conservative").estimate(
+        JobTarget(apps[0], 100.0), rng=np.random.default_rng(1))
+    assert de.conservative
+    assert de.confidence["host_ram"] == 0.0
+    assert de.info["confident"] is False
+
+
+# --- deprecation + net end-to-end ------------------------------------------
+
+def test_declared_aux_demand_legacy_path_warns(suite):
+    """A job that reaches sizing WITHOUT an estimate (legacy policies)
+    falls back to declared aux curves — with a DeprecationWarning."""
+    apps, moe = suite
+    from repro.core.simulator import Job, Policy
+    pol = Policy(moe)
+    app = _staged_app(apps)
+    cfg = SimConfig(primary_axis="hbm",
+                    extra_capacity={"host_ram": 8.0, "net": 20.0})
+    job = Job(0, app, 100.0, 1.0, fn_hat=app.true_fn)   # no demand_est
+    with pytest.warns(DeprecationWarning):
+        dm = pol._demand_model(cfg, job)
+    assert dm.curves["host_ram"] is app.aux_demand["host_ram"]
+    # the estimator path is warning-free and uses PREDICTED curves
+    pol.bind(cfg)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        pol.predict(job, np.random.default_rng(0))
+        dm2 = pol._demand_model(cfg, job)
+    assert dm2.curves["host_ram"] is not app.aux_demand["host_ram"]
+
+
+def test_net_axis_binds_simulator_admission(suite):
+    """net as a live axis end-to-end: predicted linear contention curve
+    against a small per-host link budget binds admissions."""
+    apps, moe = suite
+    from dataclasses import replace
+    netted = [replace(a, aux_demand={"net": MemoryFunction(
+        "affine", 0.2, 1.0)}) for a in apps]
+    cfg = SimConfig(n_hosts=4, host_mem_gb=4096.0, min_alloc_gb=4.0,
+                    primary_axis="hbm", extra_capacity={"net": 30.0},
+                    max_sim_time=1e7)
+    sim = Simulator([(netted[i], 1000.0) for i in (0, 3, 7)],
+                    OursPolicy(moe), cfg, seed=2)
+    out = sim.run()
+    assert out["binding_axes"].get("net", 0) > 0
+    for h in sim.hosts:          # bookings never exceed the link budget
+        used = sum(e.claimed_vec.get("net", 0.0) for e in h.execs)
+        assert used <= 30.0 + 1e-6
+
+
+# --- the controller built around an estimator ------------------------------
+
+def test_admission_controller_admit_target(suite):
+    """The one-call pipeline: estimate -> conservative-aware shading ->
+    binding-axis inverse, through a controller-attached estimator."""
+    from repro.sched import AdmissionController
+    apps, moe = suite
+    ctrl = AdmissionController(estimator=get_estimator("moe",
+                                                       predictor=moe))
+    free = ResourceVector(host_ram=32.0, cpu=1.0)
+    dec = ctrl.admit_target(JobTarget(apps[0], 100.0), free,
+                            rng=np.random.default_rng(0), cap=50.0)
+    assert dec.units > 0
+    est = dec.info["estimate"]
+    assert isinstance(est, DemandEstimate)
+    assert dec.booked.fits(dec.budget)
+    # a name spec resolves through the registry; the conservative
+    # estimate halves the shaded memory budget
+    cons = AdmissionController(estimator="conservative")
+    dec2 = cons.admit_target(JobTarget(apps[0], 100.0), free,
+                             rng=np.random.default_rng(0))
+    assert dec2.info["estimate"].conservative
+    assert dec2.budget_gb == pytest.approx(16.0)     # 32 GB halved
+    # no estimator attached -> loud failure, not a silent scalar path
+    with pytest.raises(RuntimeError):
+        AdmissionController().estimate(JobTarget(apps[0], 1.0))
+
+
+def test_policy_rebind_keeps_owned_controller_in_sync(suite):
+    """Re-binding a policy under a different SimConfig.estimator must
+    update its owned controller's estimator handle too."""
+    apps, moe = suite
+    pol = OursPolicy(moe)
+    pol.bind(SimConfig(n_hosts=2))
+    assert pol.admission.estimator is pol._est
+    first = pol._est
+    pol.bind(SimConfig(n_hosts=2, estimator="conservative"))
+    assert pol._est is not first
+    assert pol.admission.estimator is pol._est
+    # a caller-supplied shared controller is never clobbered
+    from repro.sched import AdmissionController
+    shared = AdmissionController(estimator="oracle")
+    keep = shared.estimator
+    pol2 = OursPolicy(moe, admission=shared)
+    pol2.bind(SimConfig(n_hosts=2, estimator="conservative"))
+    assert shared.estimator is keep
+
+
+# --- online updates through the registry handle ----------------------------
+
+def test_partial_update_flows_through_estimator_handle(suite):
+    apps, moe = suite
+    est = _est("moe", copy.deepcopy(moe))
+    assert est.supports_online_update
+    f = np.clip(apps[0].features + 0.4, 0, 1.2)
+    assert est.partial_update(f, "affine") is True
+    assert est.partial_update(f, "affine") is False     # dedupe
+    fam, dist, conf = est.select_family(f)
+    assert fam == "affine"
+    # estimators without online learning drop the offer instead of
+    # raising — the refresher counts it as a rejection
+    cons = get_estimator("conservative")
+    assert cons.partial_update(f, "affine") is False
+    ref = OnlineRefresher(cons)
+    out = ref.observe(f, [1.0, 2.0, 4.0], [1.0, 2.0, 4.0],
+                      confident=False)
+    assert out is None and ref.rejected == 1 and ref.accepted == 0
+
+
+def test_refresher_accepts_through_moe_handle(suite):
+    apps, moe = suite
+    est = _est("moe", copy.deepcopy(moe))
+    ref = OnlineRefresher(est)
+    rng = np.random.default_rng(0)
+    f = np.clip(apps[0].features + 0.5, 0, 1.5)
+    xs = np.asarray([2.0, 5.0, 10.0, 20.0])
+    ys = 0.5 + 0.8 * xs                       # cleanly affine
+    out = ref.observe(f, xs, ys, confident=False)
+    assert out == "affine" and ref.accepted == 1
+    assert est.predictor.n_online_rows == 1
+    assert rng is not None

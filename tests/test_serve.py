@@ -274,11 +274,12 @@ def test_load_trace_jsonl_rejects_bad_rows(tmp_path):
         load_trace_jsonl(str(p), apps)
 
 
-# --- calibrated footprint helper (DemandModel.from_model_config) -----------
+# --- calibrated footprint helper: the kv-growth estimator owns the
+# cache; DemandModel.from_model_config is its deprecated shim ----------------
 
 def test_from_model_config_caches_per_key(capsys):
     from repro.configs import get_config
-    from repro.sched.resources import _FOOTPRINT_CACHE
+    from repro.sched.estimator import _FOOTPRINT_CACHE
     cfg = get_config("qwen3-0.6b", smoke=True)
     _FOOTPRINT_CACHE.pop((cfg.name, 40), None)
     dm1 = DemandModel.from_model_config(cfg, 40)

@@ -13,6 +13,10 @@
     (sweepable repro.sched.estimator entries: moe / oracle /
     single-family / conservative; baselines keep their defining
     predictors) — the CI smoke gate sweeps moe + conservative
+``python -m benchmarks.run --smoke --replicas 2 --router net-aware --bench serving_bench``
+    size the serving bench's multi-replica routing cell
+    (repro.sched.cluster Router registry: single / least-loaded /
+    net-aware)
 
 Prints ``name,value,derived`` CSV rows; per-bench JSON lands in results/.
 """
@@ -57,6 +61,12 @@ def main() -> None:
                     help="demand estimator for the OURS policy in every "
                          "SimConfig (moe/oracle/single-family/"
                          "conservative)")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="replica count for the serving bench's "
+                         "multi-replica routing cell")
+    ap.add_argument("--router", default=None,
+                    help="router for the serving bench's multi-replica "
+                         "cell (single/least-loaded/net-aware)")
     args = ap.parse_args()
     # env, not arguments: bench modules build their SimConfigs
     # themselves; the environment is read at (deferred) import time
@@ -75,6 +85,16 @@ def main() -> None:
             ap.error(f"estimator {args.estimator!r} is not sweepable "
                      f"(choose from: {SWEEPABLE_ESTIMATORS})")
         os.environ["REPRO_ESTIMATOR"] = args.estimator
+    if args.replicas is not None:
+        if args.replicas < 1:
+            ap.error(f"--replicas must be >= 1 (got {args.replicas})")
+        os.environ["REPRO_SERVE_REPLICAS"] = str(args.replicas)
+    if args.router is not None:
+        from repro.sched.cluster import available_routers
+        if args.router not in available_routers():
+            ap.error(f"unknown router {args.router!r} "
+                     f"(available: {available_routers()})")
+        os.environ["REPRO_SERVE_ROUTER"] = args.router
     todo = BENCHES if not args.bench else [
         b for b in BENCHES if any(b.startswith(p) for p in args.bench)]
     failures = []

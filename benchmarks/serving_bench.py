@@ -1,6 +1,8 @@
 """Continuous-batching vs wave serving sweep (beyond paper): the paper's
 budget-inverse admission applied per DECODE STEP instead of per wave,
-over arrival rate x HBM budget x placement policy.
+over arrival rate x HBM budget x placement policy — plus a multi-replica
+routing cell over the ``net`` axis (the ``repro.sched.cluster`` Router
+registry).
 
 Both modes share the request population, demand model, budget vector and
 (virtual-time) execution cost model — the only difference is when
@@ -9,11 +11,21 @@ admission runs.  Reported per cell:
 * goodput (completed requests' tokens per second) for both modes and
   the continuous/wave ratio — the serving analogue of the paper's STP
   gain from co-location,
+* SLO goodput (tokens from requests meeting their TTFT and TPOT
+  deadlines) and attainment for continuous mode,
 * TTFT mean / p95 and preemption rate for continuous mode,
 * the per-step binding-axis histogram (hbm vs host_ram).
 
+The replica cell serves a net-contended population (per-request egress
+bandwidth against a tight per-replica ``net`` budget) on N replica
+Nodes and compares the selected router against the ``single`` routing
+baseline — routed goodput must beat single-node goodput, which is the
+acceptance bar for multi-replica routing being real.
+
     PYTHONPATH=src python -m benchmarks.run --bench serving_bench
     PYTHONPATH=src python -m benchmarks.run --smoke --bench serving_bench
+    PYTHONPATH=src python -m benchmarks.run --smoke --replicas 2 \
+        --router net-aware --bench serving_bench
 """
 from __future__ import annotations
 
@@ -35,7 +47,18 @@ PROMPT_LEN = 24
 WEIGHTS_GB = 0.5
 KV_GB_PER_TOKEN = 2e-4
 HOST_RAM_PER_REQ_GB = 0.01
+# SLO deadlines (virtual seconds): generous enough that an uncontended
+# run attains them, tight enough that wave-style queueing misses TTFT
+TTFT_SLO_S = 0.25
+TPOT_SLO_S = 0.05
 SEED = 7
+
+# --- the multi-replica routing cell (repro.sched.cluster) ------------------
+# benchmarks/run.py --replicas / --router land here via the environment
+REPLICAS = int(os.environ.get("REPRO_SERVE_REPLICAS", "2"))
+ROUTER = os.environ.get("REPRO_SERVE_ROUTER", "net-aware")
+NET_GBPS_PER_REQ = 0.1
+NET_BUDGET_GBPS = 0.25          # per replica: ~2 concurrent requests
 
 
 def _requests(n: int, rate: float, seed: int):
@@ -48,7 +71,9 @@ def _requests(n: int, rate: float, seed: int):
                                                 PROMPT_LEN + 1)),
                     max_new_tokens=int(rng.integers(MAX_NEW // 4,
                                                     MAX_NEW + 1)),
-                    arrival=float(t[i]))
+                    arrival=float(t[i]),
+                    ttft_deadline=TTFT_SLO_S,
+                    tpot_deadline=TPOT_SLO_S)
             for i in range(n)]
 
 
@@ -75,6 +100,30 @@ def _run(mode: str, rate: float, kv_mult: float, placement: str):
     return summary
 
 
+def _run_replicated(router: str, replicas: int):
+    """The net-contended routing cell: per-request egress bandwidth
+    against a tight per-replica net budget, served on ``replicas``
+    Nodes with arrivals routed by ``router``."""
+    from repro.sched.resources import ResourceVector
+    from repro.serve import Engine, ServingDemand
+
+    full_ctx = PROMPT_LEN + MAX_NEW
+    demand = ServingDemand(
+        weights_gb=WEIGHTS_GB, kv_gb_per_token=KV_GB_PER_TOKEN,
+        extra_axes={"net": NET_GBPS_PER_REQ})
+    # generous HBM so the net axis is what binds joins
+    budget = ResourceVector(
+        hbm=WEIGHTS_GB + KV_GB_PER_TOKEN * full_ctx * 16.0,
+        net=NET_BUDGET_GBPS)
+    engine = Engine(_requests(N_REQUESTS, 40.0, SEED + 1), demand,
+                    budget, mode="continuous", placement="fcfs",
+                    max_batch=32, replicas=replicas, router=router)
+    summary = engine.run()
+    for dec in engine.metrics.steps:
+        assert dec.booked.fits(dec.budget) or dec.forced, dec
+    return summary
+
+
 def main() -> dict:
     payload: dict = {"cells": []}
     worst = np.inf
@@ -93,6 +142,9 @@ def main() -> dict:
                      f"{wave['goodput_tok_s']:.1f}", "tok/s")
                 emit(f"{cell}/goodput_ratio", f"{ratio:.3f}",
                      "continuous / wave at equal budget")
+                emit(f"{cell}/slo_goodput", f"{cont['slo_goodput_tok_s']:.1f}",
+                     f"attainment {cont['slo_attainment']:.2f} "
+                     f"(ttft<={TTFT_SLO_S}s tpot<={TPOT_SLO_S}s)")
                 emit(f"{cell}/ttft_mean_ms",
                      f"{cont['ttft_mean_s'] * 1e3:.1f}",
                      f"p95 {cont['ttft_p95_s'] * 1e3:.1f}ms")
@@ -110,12 +162,36 @@ def main() -> dict:
     emit("serving/goodput_ratio_min", f"{worst:.3f}",
          "continuous >= wave expected at every cell")
     payload["ratio_min"] = worst
+
+    # --- multi-replica routing over the net axis -------------------------
+    routed = _run_replicated(ROUTER, REPLICAS)
+    single = _run_replicated("single", REPLICAS)
+    route_ratio = routed["goodput_tok_s"] \
+        / max(single["goodput_tok_s"], 1e-12)
+    spread = " ".join(f"n{n}:{c}" for n, c in
+                      sorted(routed["node_steps"].items()))
+    emit(f"serving/replicas{REPLICAS}/{ROUTER}/goodput",
+         f"{routed['goodput_tok_s']:.1f}", f"step spread [{spread}]")
+    emit(f"serving/replicas{REPLICAS}/single/goodput",
+         f"{single['goodput_tok_s']:.1f}",
+         "routing baseline (all on node 0)")
+    emit(f"serving/replicas{REPLICAS}/route_ratio", f"{route_ratio:.3f}",
+         f"{ROUTER} / single under net contention")
+    payload["replicas"] = {
+        "replicas": REPLICAS, "router": ROUTER,
+        "routed": routed, "single": single, "ratio": route_ratio}
     save_result("serving_bench", payload)
+
     if worst < 0.99:
         raise AssertionError(
             f"continuous batching lost to wave mode somewhere in the "
             f"sweep (min ratio {worst:.3f}) — step-level admission "
             f"regressed")
+    if REPLICAS > 1 and ROUTER != "single" and route_ratio < 1.02:
+        raise AssertionError(
+            f"{ROUTER!r} routing over {REPLICAS} replicas did not beat "
+            f"single-node routing under net contention "
+            f"(ratio {route_ratio:.3f}) — the Router registry regressed")
     return payload
 
 

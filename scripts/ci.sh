@@ -3,11 +3,13 @@
 # regression (hypothesis import killing collection; >2 min runs) cannot
 # silently come back.  After the fast pytest selection, a tiny --smoke
 # benchmark pass exercises the bench plumbing end-to-end (including the
-# multi-axis vector-admission scenario, the net-binding-axis scenario,
-# and the continuous-vs-wave serving sweep, which asserts continuous >=
-# wave goodput), once per demand estimator in $CI_SMOKE_ESTIMATORS
-# (default: the default wrap + the conservative registry entry), all
-# inside the SAME wall-clock cap.
+# multi-axis vector-admission scenario and the net-binding-axis
+# scenario), once per demand estimator in $CI_SMOKE_ESTIMATORS
+# (default: the default wrap + the conservative registry entry); then a
+# replica-routing pass runs the continuous-vs-wave serving sweep
+# (asserts continuous >= wave goodput AND routed > single-node goodput
+# with 2 replicas net-aware) plus open_arrivals through the
+# ClusterRuntime shim — all inside the SAME wall-clock cap.
 #
 #   scripts/ci.sh            # fast selection + smoke, <= $CI_TIMEOUT_S (120)
 #   CI_FULL=1 scripts/ci.sh  # full suite incl. @slow tier-2 (longer cap)
@@ -18,7 +20,9 @@ cd "$(dirname "$0")/.."
 
 CI_TIMEOUT_S="${CI_TIMEOUT_S:-120}"
 PYTHON="${PYTHON:-python}"
-CI_SMOKE_BENCHES="${CI_SMOKE_BENCHES-open_arrivals tpu_colocation serving_bench}"
+# serving_bench ignores --estimator (it builds ServingDemand directly),
+# so it runs ONCE, in the replica-routing pass below, not per estimator
+CI_SMOKE_BENCHES="${CI_SMOKE_BENCHES-open_arrivals tpu_colocation}"
 START_S=$SECONDS
 
 # Deps: the image bakes in the jax/pallas toolchain; install only what's
@@ -74,5 +78,29 @@ if [ -n "$CI_SMOKE_BENCHES" ]; then
         fi
         [ $rc -ne 0 ] && exit $rc
     done
+fi
+
+# Multi-replica routing smoke (repro.sched.cluster): the serving bench's
+# net-contended cell with 2 replicas routed net-aware (asserts routed >
+# single-node goodput), plus an open_arrivals pass — which since the
+# ClusterRuntime redesign runs the simulator through the event-driven
+# runtime shim end-to-end.  Same hard wall-clock cap.
+if [ -n "$CI_SMOKE_BENCHES" ]; then
+    REMAIN_S=$(( CI_TIMEOUT_S - (SECONDS - START_S) ))
+    if [ "$REMAIN_S" -lt 10 ]; then
+        echo "ci: FAILED — no budget left for the replica-routing smoke" \
+             "(${REMAIN_S}s of ${CI_TIMEOUT_S}s)" >&2
+        exit 1
+    fi
+    echo "ci: running replica-routing smoke (--replicas 2 --router" \
+         "net-aware, ${REMAIN_S}s left)"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        timeout --signal=TERM --kill-after=15 "$REMAIN_S" \
+        "$PYTHON" -m benchmarks.run --smoke --replicas 2 \
+        --router net-aware --bench serving_bench open_arrivals || rc=$?
+    if [ $rc -eq 124 ]; then
+        echo "ci: FAILED — replica-routing smoke exceeded the remaining" \
+             "${REMAIN_S}s budget" >&2
+    fi
 fi
 exit $rc

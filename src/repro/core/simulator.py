@@ -27,10 +27,17 @@ pointed work; straggler executors get speculative backups.
 
 Rates are piecewise-constant between events; every host-state change
 re-times that host's executors (lazy re-heap with version counters).
+
+Since the ClusterRuntime redesign the event clock, heap, and per-host
+booked-capacity ledger live on the shared
+``repro.sched.cluster`` substrate (the same one the serving engine's
+replicas run on): the simulator registers arrive/profiled/finish/fail
+handlers on a :class:`~repro.sched.cluster.ClusterRuntime` and
+``Simulator.run`` is a thin shim over ``runtime.run`` — pinned
+bit-identical to the pre-runtime loop by ``tests/test_cluster.py``.
 """
 from __future__ import annotations
 
-import heapq
 import itertools
 import os
 import warnings
@@ -41,9 +48,10 @@ import numpy as np
 
 from repro.core.experts import MemoryFunction
 from repro.core.workloads import AppProfile
-# resources/placement are import-cycle-free (they never import
+# cluster/resources/placement are import-cycle-free (they never import
 # repro.core); admission/estimator are NOT — see the lazy imports in
 # Policy.__init__ / Policy.bind
+from repro.sched.cluster import ClusterRuntime, ClusterState, Node
 from repro.sched.placement import get_placement
 from repro.sched.resources import DemandModel, ResourceVector
 
@@ -164,11 +172,22 @@ class Executor:
 
 @dataclass
 class Host:
+    """Executor-level host state.  Booked-capacity accounting lives on
+    the wrapped :class:`~repro.sched.cluster.Node` (the shared substrate
+    the serving engine's replicas use too); the host keeps what is
+    simulator-specific — live executors, true memory, paging."""
     hid: int
     mem_cap: float                    # primary-axis capacity (shortcut)
     execs: List[Executor] = field(default_factory=list)
     up: bool = True
     capacity: Optional[ResourceVector] = None  # full axis capacities
+    node: Optional[Node] = None       # booked-claims ledger
+
+    def __post_init__(self):
+        if self.node is None:
+            cap = self.capacity if self.capacity is not None \
+                else ResourceVector(host_ram=self.mem_cap)
+            self.node = Node(self.hid, cap)
 
     @property
     def mem_true(self) -> float:
@@ -183,14 +202,9 @@ class Host:
         return sum(e.job.app.cpu_load for e in self.execs)
 
     def free_vector(self) -> ResourceVector:
-        """Unbooked capacity per axis (capacity minus booked claims)."""
-        cap = self.capacity if self.capacity is not None \
-            else ResourceVector(host_ram=self.mem_cap)
-        used = {a: sum(e.claimed_vec.get(a, 0.0)
-                       if e.claimed_vec is not None else 0.0
-                       for e in self.execs)
-                for a in cap.axes}
-        return cap.headroom(ResourceVector(**used))
+        """Unbooked capacity per axis (capacity minus booked claims),
+        read off the node's claim ledger."""
+        return self.node.headroom()
 
     def paging(self) -> bool:
         return self.mem_true > self.mem_cap
@@ -211,8 +225,21 @@ class Simulator:
         if callable(bind):      # fix the config the policy predicts under
             bind(cfg)
         capacity = cfg.host_capacity()
-        self.hosts = [Host(h, cfg.host_mem_gb, capacity=capacity)
-                      for h in range(cfg.n_hosts)]
+        self.cluster = ClusterState.homogeneous(cfg.n_hosts, capacity)
+        self.hosts = [Host(n.nid, cfg.host_mem_gb, capacity=capacity,
+                           node=n) for n in self.cluster]
+        # the shared event-driven substrate (repro.sched.cluster): the
+        # runtime owns the clock + heap + node ledger; the simulator
+        # registers its workload-specific handlers on it.  Simulator.run
+        # is a thin shim over runtime.run — results are pinned
+        # bit-identical to the pre-runtime loop by tests/test_cluster.py
+        self.runtime = ClusterRuntime(self.cluster)
+        self.runtime.on("arrive", self._on_arrive)
+        self.runtime.on("profiled", self._on_profiled)
+        for kind in ("finish", "wake", "oom"):
+            self.runtime.on(kind, self._make_exec_handler(kind))
+        self.runtime.on("fail", self._on_fail)
+        self.runtime.on("repair", self._on_repair)
         self.jobs: List[Job] = []
         if arrivals is not None:
             for jid, a in enumerate(sorted(arrivals, key=lambda a: a.t)):
@@ -224,20 +251,26 @@ class Simulator:
                 c_iso = items / (cfg.n_hosts * app.rate)
                 self.jobs.append(Job(jid, app, items, c_iso,
                                      unassigned=items))
-        self.events: list = []
-        self._seq = itertools.count()
-        self.t = 0.0
         self.util_trace: List[Tuple[float, float]] = []
         self._eid = itertools.count()
         self.oom_count = 0
         self.paging_time = 0.0
-        # axis -> count of admission decisions it bound ("cap" = the
-        # Spark chunk / remaining-work cap bound before any resource)
-        self.binding_axes: Dict[str, int] = {}
 
     # --- event plumbing ---------------------------------------------------
+    @property
+    def t(self) -> float:
+        """The virtual clock — owned by the runtime's event loop."""
+        return self.runtime.t
+
+    @property
+    def binding_axes(self) -> Dict[str, int]:
+        """Axis -> count of admission decisions it bound, aggregated
+        over the cluster's nodes ("cap" = the Spark chunk /
+        remaining-work cap bound before any resource)."""
+        return self.cluster.binding_axes()
+
     def _push(self, t: float, kind: str, payload=None):
-        heapq.heappush(self.events, (t, next(self._seq), kind, payload))
+        self.runtime.push(t, kind, payload)
 
     def _rate(self, e: Executor) -> float:
         if self.t < e.delay_until or not e.host.up:
@@ -302,6 +335,7 @@ class Simulator:
         job.unassigned -= items
         job.active += 1
         host.execs.append(e)
+        host.node.book(e.eid, e.claimed_vec)
         # OOM check: large overflow kills the executor after wasted time
         over = host.mem_true - host.mem_cap
         if over > self.cfg.oom_overflow_frac * host.mem_cap:
@@ -315,6 +349,7 @@ class Simulator:
     def _remove_exec(self, e: Executor, requeue_items: float):
         if e in e.host.execs:
             e.host.execs.remove(e)
+            e.host.node.release(e.eid)
             e.job.active -= 1
         e.job.unassigned += requeue_items
         self._advance_host(e.host)
@@ -325,8 +360,79 @@ class Simulator:
                 and job.unassigned <= tol and job.active == 0:
             job.finish = t
 
+    # --- event handlers (registered on the ClusterRuntime) ------------------
+    def _on_arrive(self, t: float, payload) -> None:
+        job, frac = payload
+        if frac is not None:
+            # profiling runs while the job waits; its processed
+            # items credit the job (paper: no cycle is wasted)
+            t_prof = frac * job.c_iso
+            if self.cfg.profile_single_host:
+                credit = min(t_prof * job.app.rate, 0.15 * job.items)
+            else:
+                credit = 0.15 * job.items
+            job.done += credit
+            job.unassigned -= credit
+            self._push(t + t_prof, "profiled", job)
+        else:
+            self._push(t, "profiled", job)
+
+    def _on_profiled(self, t: float, job) -> None:
+        job.profiled_at = t
+        job.fn_hat, job.info = self.policy.predict(job, self.rng)
+        self.policy.dispatch(self)
+
+    def _make_exec_handler(self, kind: str):
+        def handler(t: float, payload):
+            e, version = payload
+            if e not in e.host.execs:
+                return False  # executor already gone (stale event)
+            if kind != "oom" and e.version != version:
+                return False  # stale re-timed event
+            self._advance_host(e.host)
+            if kind == "oom" and e.items_left > 1e-9:
+                self._remove_exec(e, e.items_left)
+                # scheduler reaction (paper Section 2.3: re-run an
+                # OOM-killed executor in isolation): escalate — halve
+                # budgets, and after 2 OOMs only place this job on
+                # empty hosts
+                e.job.oom_count += 1
+                self.policy.dispatch(self, [e.host])
+            elif e.items_left <= 1e-9:
+                self._remove_exec(e, 0.0)
+                self._maybe_finish(e.job, t)
+                self.policy.dispatch(self, [e.host])
+        return handler
+
+    def _on_fail(self, t: float, host) -> None:
+        if host.up:
+            host.up = False
+            host.node.up = False
+            # re-queue non-checkpointed work
+            for e in list(host.execs):
+                lost = min(e.done_since_ckpt, e.job.done)
+                e.job.done -= lost
+                self._remove_exec(e, e.items_left + lost)
+            self._push(t + self.cfg.repair_time_s, "repair", host)
+        self._push(t + self.rng.exponential(self.cfg.host_mtbf_s),
+                   "fail", host)
+
+    def _on_repair(self, t: float, host) -> None:
+        host.up = True
+        host.node.up = True
+        self.policy.dispatch(self, [host])
+
+    def _tick(self, t: float) -> None:
+        self.util_trace.append(
+            (t, sum(h.cpu_used for h in self.hosts if h.up)
+             / max(len(self.hosts), 1)))
+
     # --- main loop ----------------------------------------------------------
     def run(self) -> Dict:
+        """Thin shim over :meth:`ClusterRuntime.run`: seed the arrival
+        (and failure) events, drain the loop, summarize.  Pinned
+        bit-identical to the pre-runtime inline heap by the goldens in
+        ``tests/test_cluster.py``."""
         cfg = self.cfg
         for job in self.jobs:
             # profile fraction drawn HERE (not at pop time) so the RNG
@@ -340,71 +446,9 @@ class Simulator:
                 self._push(self.rng.exponential(cfg.host_mtbf_s),
                            "fail", h)
 
-        while self.events:
-            t, _, kind, payload = heapq.heappop(self.events)
-            if t > cfg.max_sim_time:
-                break
-            self.t = t
-            if kind == "arrive":
-                job, frac = payload
-                if frac is not None:
-                    # profiling runs while the job waits; its processed
-                    # items credit the job (paper: no cycle is wasted)
-                    t_prof = frac * job.c_iso
-                    if cfg.profile_single_host:
-                        credit = min(t_prof * job.app.rate,
-                                     0.15 * job.items)
-                    else:
-                        credit = 0.15 * job.items
-                    job.done += credit
-                    job.unassigned -= credit
-                    self._push(t + t_prof, "profiled", job)
-                else:
-                    self._push(t, "profiled", job)
-            elif kind == "profiled":
-                payload.profiled_at = t
-                payload.fn_hat, payload.info = self.policy.predict(
-                    payload, self.rng)
-                self.policy.dispatch(self)
-            elif kind in ("finish", "wake", "oom"):
-                e, version = payload
-                if e not in e.host.execs:
-                    continue  # executor already gone
-                if kind != "oom" and e.version != version:
-                    continue  # stale re-timed event
-                self._advance_host(e.host)
-                if kind == "oom" and e.items_left > 1e-9:
-                    self._remove_exec(e, e.items_left)
-                    # scheduler reaction (paper Section 2.3: re-run an
-                    # OOM-killed executor in isolation): escalate — halve
-                    # budgets, and after 2 OOMs only place this job on
-                    # empty hosts
-                    e.job.oom_count += 1
-                    self.policy.dispatch(self, [e.host])
-                elif e.items_left <= 1e-9:
-                    self._remove_exec(e, 0.0)
-                    self._maybe_finish(e.job, t)
-                    self.policy.dispatch(self, [e.host])
-            elif kind == "fail":
-                host = payload
-                if host.up:
-                    host.up = False
-                    # re-queue non-checkpointed work
-                    for e in list(host.execs):
-                        lost = min(e.done_since_ckpt, e.job.done)
-                        e.job.done -= lost
-                        self._remove_exec(e, e.items_left + lost)
-                    self._push(t + cfg.repair_time_s, "repair", host)
-                self._push(t + self.rng.exponential(cfg.host_mtbf_s),
-                           "fail", host)
-            elif kind == "repair":
-                payload.up = True
-                self.policy.dispatch(self, [payload])
-            self.util_trace.append(
-                (t, sum(h.cpu_used for h in self.hosts if h.up)
-                 / max(len(self.hosts), 1)))
-            if all(j.finish is not None for j in self.jobs):
-                break
+        self.runtime.run(
+            max_time=cfg.max_sim_time, tick=self._tick,
+            until=lambda: all(j.finish is not None for j in self.jobs))
 
         # events drained: close out any numerically-finished jobs
         for job in self.jobs:
@@ -584,7 +628,7 @@ class Policy:
         if n < min(chunk * 0.25, job.unassigned) - 1e-12 or n <= 1e-9:
             return None
         axis = dec.binding_axis or "cap"
-        sim.binding_axes[axis] = sim.binding_axes.get(axis, 0) + 1
+        host.node.record_binding(axis)
         return n
 
     def spawn_params(self, sim, job, host,

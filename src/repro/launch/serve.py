@@ -29,6 +29,13 @@ Queue order and preemption priority are pluggable via the
 fcfs|sjf|best-fit|arrival-aware``): ``sjf`` serves short requests first,
 shrinking padding and mean TTFT.
 
+``--replicas N`` serves over N replica Nodes on the shared
+``repro.sched.cluster`` runtime — each replica gets its own backend and
+the full per-replica budget, and arriving requests are routed by the
+``--router`` registry entry (``single`` / ``least-loaded`` /
+``net-aware``; the net-aware router spreads load over the replicas'
+``net``-axis headroom when ``--net-gbps`` budgets it).
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 8 --decode-steps 16
 """
@@ -40,8 +47,8 @@ import time
 import numpy as np
 
 from repro.configs import get_config
-from repro.sched import (ModelTarget, ResourceVector,
-                         available_placements, get_estimator)
+from repro.sched import (ModelTarget, ResourceVector, available_placements,
+                         available_routers, get_estimator)
 from repro.serve import Engine, JaxBackend, Request, ServingDemand
 
 #: estimators that make sense for a serving deployment (job-side ones
@@ -96,6 +103,13 @@ def main():
     ap.add_argument("--rate", type=float, default=0.0,
                     help="request arrival rate /s (0 = all at t=0)")
     ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving replicas (each gets its own backend "
+                         "and the full per-replica budget)")
+    ap.add_argument("--router", default="single",
+                    choices=available_routers(),
+                    help="how arriving requests are routed to replicas "
+                         "(repro.sched.cluster registry)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -122,19 +136,27 @@ def main():
 
     rng = np.random.default_rng(args.seed)
     requests = build_requests(args, rng)
-    backend = JaxBackend(cfg, max_len=max_len, seed=args.seed)
-    engine = Engine(requests, demand, budget, backend, mode=args.mode,
-                    placement=args.placement, max_batch=args.max_batch)
+    backends = [JaxBackend(cfg, max_len=max_len, seed=args.seed + r)
+                for r in range(args.replicas)]
+    engine = Engine(requests, demand, budget, mode=args.mode,
+                    placement=args.placement, max_batch=args.max_batch,
+                    replicas=args.replicas, router=args.router,
+                    backends=backends)
 
     axes = ", ".join(
         f"{a}={v:.3g}" + ("Gbps" if a == "net" else "GB")
         for a, v in budget.items())
     print(f"serving {args.requests} requests, mode={args.mode}, "
-          f"placement={args.placement}, budget [{axes}]")
+          f"placement={args.placement}, replicas={args.replicas} "
+          f"(router={args.router}), budget/replica [{axes}]")
     t0 = time.time()
     summary = engine.run()
     wall = time.time() - t0
     print(engine.metrics.format_summary(summary))
+    if args.replicas > 1:
+        spread = " ".join(f"n{n}:{c}" for n, c in
+                          sorted(summary["node_steps"].items()))
+        print(f"router {args.router!r} step spread [{spread}]")
     if summary["forced_steps"]:
         # forced progress is observable, not silent: some step ran a
         # single request whose footprint alone exceeds the budget

@@ -1,7 +1,16 @@
 """Online scheduling subsystem: the paper's runtime, factored out.
 
-Six parts, shared by the cluster simulator (``core/simulator.py``) and
+Seven parts, shared by the cluster simulator (``core/simulator.py``) and
 the serving driver (``launch/serve.py``):
+
+* ``cluster``    — the event-driven :class:`ClusterRuntime` substrate:
+  a virtual-clock :class:`EventLoop`, per-node booked-capacity
+  :class:`Node` ledgers, :class:`ClusterState`, and the ``Router``
+  registry (``single`` / ``least-loaded`` / ``net-aware``) that routes
+  each admitted job/request to a node by its predicted multi-axis
+  demand.  BOTH the batch simulator and the serving engine run on this
+  one loop (``Simulator.run`` and single-replica ``Engine`` results are
+  golden-pinned bit-identical to the pre-runtime paths).
 
 * ``estimator``  — :class:`DemandEstimator` registry (``moe`` /
   ``oracle`` / ``single-family`` / ``ann`` / ``conservative`` /
@@ -39,6 +48,16 @@ from repro.sched.resources import (  # noqa: F401
     DemandModel,
     ResourceVector,
     single_axis,
+)
+from repro.sched.cluster import (  # noqa: F401
+    ClusterRuntime,
+    ClusterState,
+    EventLoop,
+    Node,
+    Router,
+    available_routers,
+    get_router,
+    register_router,
 )
 from repro.sched.admission import (  # noqa: F401
     AdmissionController,

@@ -96,15 +96,42 @@ class AdmissionController:
                      floor: float = 0.0, book: bool = True,
                      safety_margin: Optional[float] = None,
                      oom_count: int = 0,
+                     shading: str = "per-axis",
                      info: Optional[Dict] = None) -> AdmissionDecision:
         """The one-call pipeline: estimate the target's multi-axis
-        demand, shade the free capacity by the scheduler's risk rules
-        (the estimate's conservative flag drives the low-confidence
-        fallback), and invert along the binding axis."""
+        demand, shade the free capacity by the scheduler's risk rules,
+        and invert along the binding axis.
+
+        ``shading`` selects the risk model:
+
+        * ``"per-axis"`` (default) — each memory axis's budget is shaded
+          by THAT axis's estimate confidence (full confidence leaves the
+          axis unshaded, zero confidence reproduces the conservative
+          halving, linear in between).  A well-predicted primary curve
+          no longer pays for an uncertain side-car, and vice versa.
+        * ``"scalar"`` — the deprecated pre-per-axis behaviour: the
+          single ``conservative`` flag halves every memory axis.  Kept
+          bit-identical (golden-pinned in ``tests/test_cluster.py``).
+        """
         est = self.estimate(target, probes, rng=rng)
-        budget = self.effective_budget(
-            free, safety_margin=safety_margin,
-            conservative=est.conservative, oom_count=oom_count)
+        if shading == "per-axis":
+            budget = self.effective_budget(
+                free, safety_margin=safety_margin,
+                conservative=est.conservative, oom_count=oom_count,
+                confidence=est.confidence)
+        elif shading == "scalar":
+            import warnings
+            warnings.warn(
+                "admit_target(shading='scalar') is deprecated — the "
+                "default per-axis path shades each memory axis by its "
+                "own DemandEstimate confidence",
+                DeprecationWarning, stacklevel=2)
+            budget = self.effective_budget(
+                free, safety_margin=safety_margin,
+                conservative=est.conservative, oom_count=oom_count)
+        else:
+            raise ValueError(f"unknown shading {shading!r} "
+                             f"(choose from 'per-axis', 'scalar')")
         merged = {"estimate": est, **(info or {})}
         return self.admit(est.model, budget, cap=cap, floor=floor,
                           book=book, info=merged)
@@ -124,7 +151,8 @@ class AdmissionController:
     def effective_budget(self, free: Union[float, ResourceVector], *,
                          safety_margin: Optional[float] = None,
                          conservative: bool = False,
-                         oom_count: int = 0
+                         oom_count: int = 0,
+                         confidence: Optional[Dict[str, float]] = None
                          ) -> Union[float, ResourceVector]:
         """Shade raw free capacity by the scheduler's risk rules: global
         safety margin, the low-confidence conservative fallback (paper
@@ -134,21 +162,38 @@ class AdmissionController:
         On a :class:`ResourceVector`, only the memory axes
         (``host_ram``/``hbm``) are shaded — CPU and link bandwidth are
         average-rate resources where overshoot time-shares rather than
-        OOM-kills, so risk shading does not apply."""
+        OOM-kills, so risk shading does not apply.
+
+        ``confidence`` (axis -> [0, 1], a
+        :class:`~repro.sched.estimator.DemandEstimate`'s per-axis
+        confidence) switches a memory axis from the binary conservative
+        halving to a continuous shade::
+
+            factor = conservative_factor + (1 - conservative_factor) * c
+
+        so confidence 1.0 leaves the axis unshaded and confidence 0.0
+        reproduces the halving exactly.  Memory axes absent from
+        ``confidence`` (and the scalar float path) keep the legacy
+        ``conservative`` flag behaviour."""
         margin = self.safety_margin if safety_margin is None \
             else float(safety_margin)
         shifts = min(int(oom_count), self.max_oom_shifts)
 
-        def shade(v: float) -> float:
+        def shade(v: float, conf: Optional[float] = None) -> float:
             budget = float(v) * (1.0 - margin)
-            if conservative:
+            if conf is not None:
+                cf = self.conservative_factor
+                budget *= cf + (1.0 - cf) * min(max(float(conf), 0.0),
+                                                1.0)
+            elif conservative:
                 budget *= self.conservative_factor
             budget *= self.oom_backoff ** shifts
             return budget
 
         if isinstance(free, ResourceVector):
+            conf = confidence or {}
             return ResourceVector(**{
-                a: (shade(v) if a in MEMORY_AXES else v)
+                a: (shade(v, conf.get(a)) if a in MEMORY_AXES else v)
                 for a, v in free.items()})
         return shade(free)
 

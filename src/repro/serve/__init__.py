@@ -25,10 +25,15 @@ and ``launch/serve.py`` use.
   ``build_prefill_step``/``build_decode_step`` over a slot-compacted KV
   cache with bucketed padding, so re-batching does not recompile every
   step).
-* ``engine``  — :class:`Engine`: the serving loop, ``continuous`` or
-  legacy ``wave`` mode over the same budget/demand/backend.
+* ``engine``  — :class:`Engine`: the serving loop as ``step`` events on
+  the shared :class:`~repro.sched.cluster.ClusterRuntime` — 1..N
+  replica Nodes (per-replica budget + backend) with arrivals routed by
+  the ``Router`` registry (``single``/``least-loaded``/``net-aware``);
+  ``continuous`` (default) or legacy single-replica ``wave`` mode over
+  the same budget/demand/backend.
 * ``metrics`` — :class:`ServingMetrics`: TTFT / TPOT / goodput /
-  preemption rate / per-step binding-axis histograms.
+  SLO-goodput (``Request.ttft_deadline``/``tpot_deadline``) /
+  preemption rate / per-step binding-axis and per-node histograms.
 """
 from repro.serve.request import Request, RequestState  # noqa: F401
 from repro.serve.queue import (  # noqa: F401

@@ -159,6 +159,12 @@ class StepDecision:
     binding_axis: Optional[str]     # axis that bound the join inverse
     forced: bool                    # step proceeds over budget
     forced_axes: Tuple[str, ...] = ()
+    #: rids running over budget under the progress floor — the ONE
+    #: forced-admission record shape shared by the continuous batcher
+    #: and the legacy wave path (which used to flag the step without
+    #: saying which requests were forced)
+    forced_rids: Tuple[int, ...] = ()
+    node: int = 0                   # replica Node the step ran on
 
     @property
     def over_budget(self) -> bool:
@@ -184,7 +190,7 @@ class ContinuousBatcher:
     def __init__(self, demand: ServingDemand, budget: ResourceVector,
                  controller: Optional[AdmissionController] = None,
                  placement: Union[str, PlacementPolicy] = "fcfs",
-                 max_batch: int = 64):
+                 max_batch: int = 64, node: int = 0):
         if "hbm" not in budget:
             raise ValueError("serving budget must carry the hbm axis")
         if budget["hbm"] <= 0:
@@ -195,6 +201,7 @@ class ContinuousBatcher:
         self.placement = get_placement(placement) \
             if isinstance(placement, str) else placement
         self.max_batch = int(max_batch)
+        self.node = int(node)       # replica id stamped on decisions
 
     # --- planning ---------------------------------------------------------
     def plan_step(self, running: Sequence[Request],
@@ -208,6 +215,7 @@ class ContinuousBatcher:
         preempted: List[int] = []
         forced = False
         forced_axes: Tuple[str, ...] = ()
+        forced_rids: Tuple[int, ...] = ()
 
         # 1. next step's KV growth: evict lowest-priority until it fits
         victims = list(reversed(self.placement.order_jobs(running,
@@ -218,6 +226,7 @@ class ContinuousBatcher:
                 # the progress floor: one request runs even over budget
                 forced = True
                 forced_axes = self._violated(running, 1)
+                forced_rids = (running[0].rid,)
                 break
             v = victims.pop(0)
             running.remove(v)
@@ -251,6 +260,7 @@ class ContinuousBatcher:
                 admitted = [first.rid]
                 forced = True
                 forced_axes = self._violated(running, 2)
+                forced_rids = (first.rid,)
 
         # end-of-step footprint: incumbents grow one token; joiners gain
         # two (the prefill-emitted token plus the decode-step token)
@@ -263,7 +273,8 @@ class ContinuousBatcher:
             step=step, t=now, admitted=tuple(admitted),
             preempted=tuple(preempted), batch=len(running),
             booked=booked, budget=self.budget, binding_axis=binding,
-            forced=forced, forced_axes=forced_axes)
+            forced=forced, forced_axes=forced_axes,
+            forced_rids=forced_rids, node=self.node)
 
     # --- helpers ----------------------------------------------------------
     def _join_demand(self, cands: Sequence[Request]) -> DemandModel:

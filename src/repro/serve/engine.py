@@ -1,26 +1,38 @@
-"""The serving loop: continuous batching driven by step-level admission.
+"""The serving loop: continuous batching as step events on replica Nodes.
 
 Two modes over the same queue, demand model, budget, and backend:
 
-* ``continuous`` — the tentpole: every decode step re-plans batch
-  membership through :class:`~repro.serve.batcher.ContinuousBatcher`
-  (joins when the binding-axis inverse says the KV fits, immediate
-  retirement, evict-and-requeue preemption when decode growth would
-  breach the budget).
+* ``continuous`` — the default: the engine runs on the shared
+  :class:`~repro.sched.cluster.ClusterRuntime` substrate.  Each of the
+  1..N replicas is a :class:`~repro.sched.cluster.Node` (per-replica
+  budget capacity, a live ledger of in-flight request footprints) with
+  its own backend and :class:`~repro.serve.batcher.ContinuousBatcher`;
+  every decode step is a ``step`` event on the runtime's virtual clock,
+  so replicas advance independently and interleave in time order.
+  Released requests are routed to a replica by the ``Router`` registry
+  (``single`` / ``least-loaded`` / ``net-aware``) using their predicted
+  multi-axis demand vector — ``net-aware`` spreads load over the
+  replicas' ``net`` headroom, which is what makes multi-replica serving
+  routing over the net axis real.  Preempted requests requeue on their
+  own replica (their recomputable KV is local state).
 * ``wave``       — the legacy ``launch/serve.py`` behaviour for
-  comparison: admission once per wave via ``admit_batch`` against the
-  worst-case (full-context) footprint, no joins until the whole wave
-  drains — finished requests idle in their slots, which is exactly the
-  throughput continuous batching reclaims.
+  comparison: single replica, admission once per wave via
+  ``admit_batch`` against the worst-case (full-context) footprint, no
+  joins until the whole wave drains.
+
+With one replica the event loop degenerates to the exact pre-runtime
+sequential loop — schedules and metrics are pinned bit-identical by the
+goldens in ``tests/test_cluster.py``.
 
 Time is virtual (backend cost model), so identical seeds give identical
 schedules and metrics on any machine; the jax backend's real compute
 rides inside those steps.
 
-Termination is structural, not best-effort: every loop iteration either
-decodes one token of at least one request (and tokens, once decoded,
-survive preemption via recompute) or consumes a future arrival, so the
-loop runs at most ``sum(max_new_tokens) + len(requests)`` iterations —
+Termination is structural, not best-effort: every planned step decodes
+one token of at least one request (and tokens, once decoded, survive
+preemption via recompute), and every idle wake either consumes a future
+arrival or ends that replica's event chain, so the loop runs at most
+``sum(max_new_tokens) + replicas * len(requests)`` planned steps —
 a preemption storm cannot live-lock.  ``max_steps`` is an assertion
 backstop on that bound, not a tuning knob.
 """
@@ -30,6 +42,7 @@ from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core.experts import MemoryFunction
 from repro.sched.admission import AdmissionController
+from repro.sched.cluster import ClusterRuntime, ClusterState, Router
 from repro.sched.resources import DemandModel, ResourceVector
 from repro.serve.backends import Backend, SimBackend
 from repro.serve.batcher import (ContinuousBatcher, ServingDemand,
@@ -40,12 +53,19 @@ from repro.serve.request import Request, RequestState
 
 MODES = ("continuous", "wave")
 
+#: the per-node ledger key for the resident model weights (booked once
+#: per replica; requests book their own growing KV/side-car vectors)
+_WEIGHTS_KEY = "__weights__"
+
 
 class Engine:
     """Drives a request population to completion under a resource budget.
 
-    ``run()`` returns the metrics summary; the step-by-step record stays
-    on ``engine.metrics`` for the invariant tests and benchmarks.
+    ``budget`` is PER REPLICA (each replica Node gets the full vector as
+    its capacity); ``replicas``/``router`` select the cluster shape and
+    the routing policy.  ``run()`` returns the metrics summary; the
+    step-by-step record stays on ``engine.metrics`` for the invariant
+    tests and benchmarks.
     """
 
     def __init__(self, requests: Sequence[Request],
@@ -55,20 +75,50 @@ class Engine:
                  mode: str = "continuous",
                  placement: str = "fcfs",
                  max_batch: int = 16,
-                 controller: Optional[AdmissionController] = None):
+                 controller: Optional[AdmissionController] = None,
+                 replicas: int = 1,
+                 router: Union[str, Router] = "single",
+                 backends: Optional[Sequence[Backend]] = None):
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r} (choose from {MODES})")
         if not isinstance(budget, ResourceVector):
             budget = ResourceVector(hbm=float(budget))
+        self.replicas = int(replicas)
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if mode == "wave" and self.replicas != 1:
+            raise ValueError("wave mode is the single-replica legacy "
+                             "path — use mode='continuous' with "
+                             "replicas > 1")
         self.mode = mode
         self.demand = demand
         self.budget = budget
-        self.backend = backend or SimBackend()
+        # one backend per replica: an explicit list or a single backend
+        # instance (one replica only); default SimBackends
+        if backends is not None and backend is not None:
+            raise ValueError("pass either backend= or backends=, "
+                             "not both")
+        if backends is not None:
+            self.backends = list(backends)
+            if len(self.backends) != self.replicas:
+                raise ValueError(
+                    f"got {len(self.backends)} backends for "
+                    f"{self.replicas} replicas")
+        elif backend is not None:
+            if self.replicas != 1:
+                raise ValueError("pass backends=[...] (one per replica) "
+                                 "when replicas > 1")
+            self.backends = [backend]
+        else:
+            self.backends = [SimBackend() for _ in range(self.replicas)]
+        self.backend = self.backends[0]
         self.controller = controller or AdmissionController()
         self.max_batch = int(max_batch)
         self.requests = list(requests)
-        max_len = getattr(self.backend, "max_len", None)
-        if max_len is not None:
+        for be in self.backends:
+            max_len = getattr(be, "max_len", None)
+            if max_len is None:
+                continue
             for r in self.requests:
                 if r.prompt_len + r.max_new_tokens > max_len:
                     raise ValueError(
@@ -76,29 +126,64 @@ class Engine:
                         f"{r.prompt_len + r.max_new_tokens} exceeds the "
                         f"backend's max_len {max_len}")
         self.queue = RequestQueue(self.requests, placement=placement)
-        self.batcher = ContinuousBatcher(
+        # the shared substrate: one Node per replica, capacity = the
+        # per-replica budget, weights booked once on each
+        cluster = ClusterState.homogeneous(self.replicas, budget)
+        for node in cluster:
+            node.book(_WEIGHTS_KEY, ResourceVector(hbm=demand.weights_gb))
+        self.runtime = ClusterRuntime(cluster, router=router)
+        self.batchers = [ContinuousBatcher(
             demand, budget, controller=self.controller,
-            placement=self.queue.placement, max_batch=self.max_batch)
+            placement=self.queue.placement, max_batch=self.max_batch,
+            node=r) for r in range(self.replicas)]
+        self.batcher = self.batchers[0]
         self.metrics = ServingMetrics()
         for r in self.requests:
             self.metrics.record_request(r)
-        # structural bound: one decoded token per step minimum, plus one
-        # idle-advance per arrival (see module docstring)
+        # structural bound: one decoded token per planned step minimum,
+        # plus one idle-advance per (arrival, replica) pair
         self.max_steps = sum(r.max_new_tokens for r in self.requests) \
-            + len(self.requests) + 8
+            + self.replicas * len(self.requests) + 8
+        # per-replica scheduling state (continuous mode)
+        self._pending: List[List[Request]] = \
+            [[] for _ in range(self.replicas)]
+        self._running: List[List[Request]] = \
+            [[] for _ in range(self.replicas)]
+        self._clocks: List[float] = [0.0] * self.replicas
+        self._by_rid: Dict[int, Request] = {r.rid: r for r in
+                                            self.requests}
+        self._step_no = 0
+
+    # --- routing ----------------------------------------------------------
+    def _route_released(self, now: float) -> None:
+        """Move arrived requests into a replica's pending list, chosen
+        by the router from the request's predicted demand vector against
+        per-node headroom.  The routed request books its demand on the
+        node IMMEDIATELY (a queued request is committed load: it will
+        run there), so a burst of simultaneous arrivals sees shrinking
+        headroom and spreads across replicas instead of piling onto the
+        first node."""
+        for req in self.queue.drain_released(now):
+            vec = self.demand.request_vector(req)
+            node = self.runtime.route(vec, now=now)
+            self._pending[node.nid].append(req)
+            node.book(req.rid, vec)
 
     # --- candidate filtering ---------------------------------------------
-    def _candidates(self, now: float) -> List[Request]:
-        """Pending requests the backend can physically join right now
-        (position/window constraints), in placement order."""
-        pending = self.queue.pending(now)
-        if self.backend.position and \
-                self.backend.position % self.backend.join_stride:
+    def _candidates_for(self, ridx: int, now: float) -> List[Request]:
+        """Replica ``ridx``'s pending requests its backend can
+        physically join right now (position/window constraints), in
+        placement order."""
+        backend = self.backends[ridx]
+        pending = self.queue.placement.order_jobs(
+            list(self._pending[ridx]), now=now)
+        if backend.position and \
+                backend.position % backend.join_stride:
             return []  # joins quantize to the backend's sync points
-        if self.backend.empty:
+        if backend.empty:
             # empty batch restarts: greedy cohort whose shared position
             # window fits everyone (max prefill + max remaining <= cap)
-            max_len = getattr(self.backend, "max_len", None)
+            max_len = getattr(backend, "max_len", None)
             if max_len is None:
                 return pending
             out, maxp, maxr = [], 0, 0
@@ -109,38 +194,64 @@ class Engine:
                     out.append(r)
                     maxp, maxr = p, n
             return out
-        return [r for r in pending if self.backend.joinable(r)]
+        return [r for r in pending if backend.joinable(r)]
 
     # --- shared step application -----------------------------------------
-    def _apply(self, plan: StepDecision, running: List[Request],
-               by_rid: Dict[int, Request], now: float) -> float:
-        """Evict, requeue, join.  Returns the join (prefill) cost."""
-        evicted = [by_rid[rid] for rid in plan.preempted]
+    def _apply(self, plan: StepDecision, ridx: int, now: float) -> float:
+        """Evict, requeue (to the same replica), join.  Returns the join
+        (prefill) cost."""
+        running = self._running[ridx]
+        evicted = [self._by_rid[rid] for rid in plan.preempted]
         if evicted:
-            self.backend.remove(evicted)
+            self.backends[ridx].remove(evicted)
             for r in evicted:
                 r.preemptions += 1
                 running.remove(r)
-                self.queue.requeue(r)
-        joined = [by_rid[rid] for rid in plan.admitted]
+                r.state = RequestState.QUEUED
+                self._pending[ridx].append(r)
+        joined = [self._by_rid[rid] for rid in plan.admitted]
         dt = 0.0
         if joined:
-            self.queue.take(joined)
-            dt = self.backend.join(joined, now)
+            taken = {id(r) for r in joined}
+            self._pending[ridx] = [r for r in self._pending[ridx]
+                                   if id(r) not in taken]
+            dt = self.backends[ridx].join(joined, now)
             for r in joined:
                 r.admissions += 1
                 r.state = RequestState.RUNNING
             running.extend(joined)
         return dt
 
-    def _retire(self, running: List[Request], now: float) -> None:
+    def _retire(self, ridx: int, now: float) -> None:
+        running = self._running[ridx]
         done = [r for r in running if r.done]
         if done:
-            self.backend.remove(done)
+            self.backends[ridx].remove(done)
             for r in done:
                 r.state = RequestState.FINISHED
                 r.finish_t = now
                 running.remove(r)
+
+    def _sync_node(self, ridx: int) -> None:
+        """Reconcile the replica Node's claim ledger with its committed
+        load — the running set plus the locally-queued set (queued
+        requests booked at route time; preempted ones requeue locally
+        and stay booked).  After every step the node's booked vector ==
+        weights + sum of committed request demands (the conservation
+        invariant ``tests/test_cluster.py`` pins)."""
+        node = self.runtime.cluster[ridx]
+        live = {r.rid: r for r in self._running[ridx]}
+        for r in self._pending[ridx]:
+            live[r.rid] = r
+        for key in node.keys():
+            if key != _WEIGHTS_KEY and key not in live:
+                node.release(key)
+        for rid, r in live.items():
+            vec = self.demand.request_vector(r)
+            if rid in node:
+                node.rebook(rid, vec)
+            else:
+                node.book(rid, vec)
 
     # --- the loops --------------------------------------------------------
     def run(self) -> Dict:
@@ -148,38 +259,52 @@ class Engine:
             else self._run_wave()
         return self.metrics.summary(elapsed=t)
 
-    def _run_continuous(self) -> float:
-        t, step = 0.0, 0
-        running: List[Request] = []
-        by_rid = {r.rid: r for r in self.requests}
-        while running or not self.queue.drained:
-            self.queue.release(t)
-            cands = self._candidates(t)
-            if not running and not cands:
-                nxt = self.queue.next_arrival()
-                if nxt is None:
+    # --- continuous mode: step events on the ClusterRuntime ---------------
+    def _on_step(self, t: float, ridx: int):
+        """One decode step on replica ``ridx`` — or an idle wake that
+        consumes the next arrival.  Exactly the body of the pre-runtime
+        sequential loop, dispatched per replica by the event clock."""
+        self._route_released(t)
+        running = self._running[ridx]
+        cands = self._candidates_for(ridx, t)
+        if not running and not cands:
+            nxt = self.queue.next_arrival()
+            if nxt is None:
+                if self._pending[ridx]:
                     # pending exists but nothing can join (should be
                     # impossible: empty batch accepts any valid request)
                     raise RuntimeError("serving deadlock: pending "
                                        "requests but no candidates")
-                t = nxt
-                continue
-            plan = self.batcher.plan_step(running, cands, t, step)
-            dt = self._apply(plan, running, by_rid, t)
-            dt += self.backend.decode(running)
-            t += dt
-            step += 1
-            for r in running:
-                if r.first_token_t is None:
-                    r.first_token_t = t
-            self._retire(running, t)
-            self.metrics.record_step(plan, dt)
-            if step > self.max_steps:
-                raise RuntimeError(
-                    f"engine exceeded its structural step bound "
-                    f"({self.max_steps}) — termination invariant broken")
-        return t
+                return False  # replica idle for good: chain ends
+            self.runtime.push(nxt, "step", ridx)
+            return False      # idle wake, not a planned step
+        plan = self.batchers[ridx].plan_step(running, cands, t,
+                                             self._step_no)
+        dt = self._apply(plan, ridx, t)
+        dt += self.backends[ridx].decode(running)
+        t_end = t + dt
+        self._step_no += 1
+        for r in running:
+            if r.first_token_t is None:
+                r.first_token_t = t_end
+        self._retire(ridx, t_end)
+        self._sync_node(ridx)
+        self.metrics.record_step(plan, dt)
+        if self._step_no > self.max_steps:
+            raise RuntimeError(
+                f"engine exceeded its structural step bound "
+                f"({self.max_steps}) — termination invariant broken")
+        self._clocks[ridx] = t_end
+        self.runtime.push(t_end, "step", ridx)
 
+    def _run_continuous(self) -> float:
+        self.runtime.on("step", self._on_step)
+        for ridx in range(self.replicas):
+            self.runtime.push(0.0, "step", ridx)
+        self.runtime.run()
+        return max(self._clocks)
+
+    # --- wave mode (legacy, single replica) -------------------------------
     def _wave_admission(self, cands: Sequence[Request]):
         """Once-per-wave admission against the worst-case footprint:
         every slot booked at the wave's longest full context (the
@@ -197,10 +322,9 @@ class Engine:
 
     def _run_wave(self) -> float:
         t, step = 0.0, 0
-        by_rid = {r.rid: r for r in self.requests}
-        while not self.queue.drained:
-            self.queue.release(t)
-            cands = self._candidates(t)
+        while self.queue.next_arrival() is not None or self._pending[0]:
+            self._route_released(t)
+            cands = self._candidates_for(0, t)
             if not cands:
                 nxt = self.queue.next_arrival()
                 if nxt is None:
@@ -209,21 +333,26 @@ class Engine:
                 continue
             dec = self._wave_admission(cands)
             wave = cands[:int(dec.units)]
+            forced = bool(dec.info.get("forced"))
             plan = StepDecision(
                 step=step, t=t, admitted=tuple(r.rid for r in wave),
                 preempted=(), batch=len(wave),
                 booked=self.demand.booked(wave, 0), budget=self.budget,
                 binding_axis=dec.binding_axis,
-                forced=bool(dec.info.get("forced")),
-                forced_axes=tuple(dec.info.get("forced_axes", ())))
-            dt = self._apply(plan, [], by_rid, t)
-            wave_live = [by_rid[rid] for rid in plan.admitted]
+                forced=forced,
+                forced_axes=tuple(dec.info.get("forced_axes", ())),
+                # the unified record shape: a forced wave names every
+                # request it force-admitted, like the batcher's floor
+                forced_rids=tuple(r.rid for r in wave) if forced else ())
+            dt = self._apply(plan, 0, t)
+            wave_live = [self._by_rid[rid] for rid in plan.admitted]
             self.metrics.record_step(plan, dt)
             step += 1            # step ids stay unique and monotone
             t += dt
             for r in wave_live:  # the wave's prefill emitted one token
                 if r.first_token_t is None and r.tokens_decoded:
                     r.first_token_t = t
+            self._sync_node(0)
             # drain the whole wave: finished requests idle in their
             # slots (full-occupancy step cost) until the last finishes
             while any(not r.done for r in wave_live):
@@ -238,7 +367,8 @@ class Engine:
                     booked=self.demand.booked(wave_live, 0),
                     budget=self.budget, binding_axis=None,
                     forced=plan.forced,
-                    forced_axes=plan.forced_axes), sdt)
+                    forced_axes=plan.forced_axes,
+                    forced_rids=plan.forced_rids), sdt)
                 step += 1
                 if step > self.max_steps:
                     raise RuntimeError("wave mode exceeded its "
@@ -246,5 +376,7 @@ class Engine:
             for r in wave_live:
                 r.state = RequestState.FINISHED
                 r.finish_t = t
+                self._running[0].remove(r)
             self.backend.remove(wave_live)
+            self._sync_node(0)
         return t

@@ -16,7 +16,15 @@ judged per *token*:
   first join or any re-join after eviction).
 * **binding axes** — which resource axis bound each step's join inverse,
   histogrammed exactly like the simulator's per-axis counters, plus
-  forced-step and occupancy accounting.
+  forced-step and occupancy accounting.  Forced admissions are counted
+  from the unified ``StepDecision.forced_rids`` record (the continuous
+  floor and the legacy wave path fill the same field).
+* **SLO goodput** — tokens per second from completed requests that met
+  BOTH their declared deadlines (``Request.ttft_deadline`` /
+  ``tpot_deadline``): raw goodput that blows latency targets does not
+  count, which is the serving analogue of counting only useful work.
+* **node steps** — planned decode steps per replica
+  :class:`~repro.sched.cluster.Node` (router observability).
 """
 from __future__ import annotations
 
@@ -45,7 +53,9 @@ class ServingMetrics:
         self._admissions = 0
         self._preemptions = 0
         self._forced_steps = 0
+        self._forced_admissions = 0
         self.binding_axes: Dict[str, int] = {}
+        self.node_steps: Dict[int, int] = {}
 
     # --- recording --------------------------------------------------------
     def record_step(self, dec: StepDecision, dt: float) -> None:
@@ -55,9 +65,12 @@ class ServingMetrics:
         self._preemptions += len(dec.preempted)
         if dec.forced:
             self._forced_steps += 1
+            # the unified per-request record: which rids ran over budget
+            self._forced_admissions += len(dec.forced_rids)
         if dec.binding_axis is not None and dec.admitted:
             self.binding_axes[dec.binding_axis] = \
                 self.binding_axes.get(dec.binding_axis, 0) + 1
+        self.node_steps[dec.node] = self.node_steps.get(dec.node, 0) + 1
 
     def record_request(self, req: Request) -> None:
         self.requests.append(req)
@@ -76,6 +89,8 @@ class ServingMetrics:
                 if r.finish_t is not None and r.first_token_t is not None
                 and r.tokens_decoded > 1]
         good_tokens = sum(r.tokens_decoded for r in done)
+        slo_done = [r for r in done if r.meets_slo()]
+        slo_tokens = sum(r.tokens_decoded for r in slo_done)
         batches = [d.batch for d in self.steps if d.batch > 0]
         return {
             "requests": len(self.requests),
@@ -88,13 +103,20 @@ class ServingMetrics:
             "goodput_tok_s": good_tokens / max(elapsed, 1e-12),
             "goodput_req_s": len(done) / max(elapsed, 1e-12),
             "good_tokens": good_tokens,
+            # SLO goodput: only tokens of requests that met BOTH
+            # deadlines count (requests with no deadlines always do)
+            "slo_goodput_tok_s": slo_tokens / max(elapsed, 1e-12),
+            "slo_good_tokens": slo_tokens,
+            "slo_attainment": len(slo_done) / max(len(done), 1),
             "admissions": self._admissions,
             "preemptions": self._preemptions,
             "preemption_rate": self._preemptions
             / max(self._admissions, 1),
             "forced_steps": self._forced_steps,
+            "forced_admissions": self._forced_admissions,
             "mean_batch": float(np.mean(batches)) if batches else 0.0,
             "binding_axes": dict(self.binding_axes),
+            "node_steps": dict(self.node_steps),
         }
 
     def format_summary(self, s: Optional[Dict] = None) -> str:

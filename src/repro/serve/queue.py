@@ -72,14 +72,22 @@ class RequestQueue:
     # --- time ------------------------------------------------------------
     def release(self, now: float) -> int:
         """Move requests with ``arrival <= now`` into the pending set."""
-        n = 0
-        while self._future and self._future[0].arrival <= now + 1e-12:
-            self._pending.append(self._future.pop(0))
-            n += 1
-        return n
+        out = self.drain_released(now)
+        self._pending.extend(out)
+        return len(out)
 
     def next_arrival(self) -> Optional[float]:
         return self._future[0].arrival if self._future else None
+
+    def drain_released(self, now: float) -> List[Request]:
+        """Pop requests with ``arrival <= now`` and return them in
+        arrival order WITHOUT entering the pending set — the
+        multi-replica engine routes each released request to a node's
+        own pending list instead (``repro.sched.cluster`` Router)."""
+        out: List[Request] = []
+        while self._future and self._future[0].arrival <= now + 1e-12:
+            out.append(self._future.pop(0))
+        return out
 
     # --- pending ---------------------------------------------------------
     def pending(self, now: float = 0.0,

@@ -40,6 +40,11 @@ class Request:
     max_new_tokens: int
     arrival: float = 0.0
     prompt: Optional[List[int]] = None      # token ids (jax backend)
+    # --- SLO deadlines (None = unconstrained) ----------------------------
+    #: max seconds from arrival to the first token (queueing + prefill)
+    ttft_deadline: Optional[float] = None
+    #: max mean seconds per output token after the first (decode cadence)
+    tpot_deadline: Optional[float] = None
 
     # --- lifecycle (owned by the engine) ---------------------------------
     state: RequestState = RequestState.QUEUED
@@ -79,6 +84,25 @@ class Request:
     @property
     def done(self) -> bool:
         return self.tokens_decoded >= self.max_new_tokens
+
+    # --- SLO attainment ---------------------------------------------------
+    def meets_slo(self) -> bool:
+        """True when every declared deadline held for this (finished)
+        request: TTFT within ``ttft_deadline``, mean decode cadence
+        within ``tpot_deadline`` (vacuous with a single token).  A
+        request with no deadlines always meets its (empty) SLO."""
+        if self.ttft_deadline is not None:
+            if self.first_token_t is None or \
+                    self.first_token_t - self.arrival > self.ttft_deadline:
+                return False
+        if self.tpot_deadline is not None and self.tokens_decoded > 1:
+            if self.finish_t is None or self.first_token_t is None:
+                return False
+            tpot = (self.finish_t - self.first_token_t) \
+                / (self.tokens_decoded - 1)
+            if tpot > self.tpot_deadline:
+                return False
+        return True
 
     # --- placement-registry duck typing ----------------------------------
     @property

@@ -2,7 +2,16 @@
 budget-inverse admission applied per DECODE STEP instead of per wave,
 over arrival rate x HBM budget x placement policy — plus a multi-replica
 routing cell over the ``net`` axis (the ``repro.sched.cluster`` Router
-registry).
+registry) and a paged-vs-dense KV residency cell (the
+``repro.serve.paged`` backends).
+
+The paged cell is the goodput-per-HBM acceptance bar for the paged
+KV-cache: on contended cells the paged backend's padding-waste ratio
+(resident KV slots that held no live token) must be STRICTLY below the
+dense shim's, at goodput no worse.  Its numbers are also written to
+``BENCH_serving.json`` at the repo root — goodput, TTFT p50/p99 and the
+waste ratios, dense vs paged — so the serving perf trajectory is pinned
+across PRs instead of invisible.
 
 Both modes share the request population, demand model, budget vector and
 (virtual-time) execution cost model — the only difference is when
@@ -29,6 +38,7 @@ acceptance bar for multi-replica routing being real.
 """
 from __future__ import annotations
 
+import json
 import os
 
 import numpy as np
@@ -52,6 +62,15 @@ HOST_RAM_PER_REQ_GB = 0.01
 TTFT_SLO_S = 0.25
 TPOT_SLO_S = 0.05
 SEED = 7
+
+# --- the paged-vs-dense KV residency cell (repro.serve.paged) --------------
+PAGE_SIZE = 8
+PREFILL_CHUNK = 16
+#: BENCH_serving.json lands at the repo root so the serving perf
+#: trajectory is tracked in-tree across PRs
+BENCH_SERVING_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serving.json")
 
 # --- the multi-replica routing cell (repro.sched.cluster) ------------------
 # benchmarks/run.py --replicas / --router land here via the environment
@@ -98,6 +117,49 @@ def _run(mode: str, rate: float, kv_mult: float, placement: str):
         assert dec.booked.fits(dec.budget) or dec.forced, (
             f"unforced over-budget step in {mode} sweep: {dec}")
     return summary
+
+
+def _ttft_pcts(engine):
+    ttft = [r.first_token_t - r.arrival for r in engine.requests
+            if r.first_token_t is not None]
+    return (float(np.percentile(ttft, 50)) if ttft else 0.0,
+            float(np.percentile(ttft, 99)) if ttft else 0.0)
+
+
+def _run_paged_cell(rate: float, kv_mult: float, backend: str):
+    """One contended cell on the virtual-time paged / dense-twin
+    backends: same requests, demand slope and budget — only the KV
+    residency model (and its booked quantization) differs."""
+    from repro.sched.resources import ResourceVector
+    from repro.serve import (DenseSimBackend, Engine, PagedSimBackend,
+                             ServingDemand, pages_for)
+
+    full_ctx = PROMPT_LEN + MAX_NEW
+    max_len = full_ctx + 1
+    budget = ResourceVector(
+        hbm=WEIGHTS_GB + KV_GB_PER_TOKEN * full_ctx * kv_mult)
+    if backend == "paged":
+        demand = ServingDemand(weights_gb=WEIGHTS_GB,
+                               kv_gb_per_token=KV_GB_PER_TOKEN,
+                               page_size=PAGE_SIZE)
+        be = PagedSimBackend(
+            num_pages=1 + 32 * pages_for(max_len, PAGE_SIZE),
+            page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK)
+    else:
+        demand = ServingDemand(weights_gb=WEIGHTS_GB,
+                               kv_gb_per_token=KV_GB_PER_TOKEN)
+        be = DenseSimBackend(max_len=max_len, sync=8)
+    engine = Engine(_requests(N_REQUESTS, rate, SEED), demand, budget,
+                    be, mode="continuous", placement="fcfs",
+                    max_batch=32)
+    summary = engine.run()
+    for dec in engine.metrics.steps:
+        assert dec.booked.fits(dec.budget) or dec.forced, dec
+    p50, p99 = _ttft_pcts(engine)
+    return {"goodput_tok_s": summary["goodput_tok_s"],
+            "completed": summary["completed"],
+            "ttft_p50_s": p50, "ttft_p99_s": p99,
+            "waste_ratio": be.waste_ratio()}
 
 
 def _run_replicated(router: str, replicas: int):
@@ -163,6 +225,36 @@ def main() -> dict:
          "continuous >= wave expected at every cell")
     payload["ratio_min"] = worst
 
+    # --- paged vs dense KV residency (repro.serve.paged) ------------------
+    paged_cells = []
+    for rate in RATES_PER_S:
+        for mult in BUDGET_KV_MULT:
+            paged = _run_paged_cell(rate, mult, "paged")
+            dense = _run_paged_cell(rate, mult, "dense")
+            cell = f"serving/paged/{rate}/{mult}"
+            emit(f"{cell}/goodput_paged",
+                 f"{paged['goodput_tok_s']:.1f}",
+                 f"dense {dense['goodput_tok_s']:.1f} tok/s")
+            emit(f"{cell}/ttft_p50_ms",
+                 f"{paged['ttft_p50_s'] * 1e3:.1f}",
+                 f"p99 {paged['ttft_p99_s'] * 1e3:.1f}ms (dense p50 "
+                 f"{dense['ttft_p50_s'] * 1e3:.1f} p99 "
+                 f"{dense['ttft_p99_s'] * 1e3:.1f}ms)")
+            emit(f"{cell}/waste_ratio",
+                 f"{paged['waste_ratio']:.3f}",
+                 f"dense {dense['waste_ratio']:.3f} (resident KV "
+                 f"slots with no live token)")
+            paged_cells.append({"rate": rate, "kv_mult": mult,
+                                "paged": paged, "dense": dense})
+    payload["paged_vs_dense"] = paged_cells
+    with open(BENCH_SERVING_JSON, "w") as f:
+        json.dump({"page_size": PAGE_SIZE,
+                   "prefill_chunk": PREFILL_CHUNK,
+                   "n_requests": N_REQUESTS, "smoke": SMOKE,
+                   "cells": paged_cells}, f, indent=1, default=float)
+    emit("serving/paged/pinned", BENCH_SERVING_JSON,
+         "goodput + TTFT p50/p99 + waste, dense vs paged")
+
     # --- multi-replica routing over the net axis -------------------------
     routed = _run_replicated(ROUTER, REPLICAS)
     single = _run_replicated("single", REPLICAS)
@@ -192,6 +284,22 @@ def main() -> dict:
             f"{ROUTER!r} routing over {REPLICAS} replicas did not beat "
             f"single-node routing under net contention "
             f"(ratio {route_ratio:.3f}) — the Router registry regressed")
+    for c in paged_cells:
+        # the paged-KV acceptance bar: strictly less padding waste at
+        # goodput no worse, on every contended cell
+        if c["paged"]["waste_ratio"] >= c["dense"]["waste_ratio"]:
+            raise AssertionError(
+                f"paged backend did not cut padding waste at "
+                f"rate={c['rate']} kv_mult={c['kv_mult']}: "
+                f"{c['paged']['waste_ratio']:.3f} vs dense "
+                f"{c['dense']['waste_ratio']:.3f}")
+        if c["paged"]["goodput_tok_s"] < \
+                c["dense"]["goodput_tok_s"] * 0.95:
+            raise AssertionError(
+                f"paged backend lost goodput at rate={c['rate']} "
+                f"kv_mult={c['kv_mult']}: "
+                f"{c['paged']['goodput_tok_s']:.1f} vs dense "
+                f"{c['dense']['goodput_tok_s']:.1f} tok/s")
     return payload
 
 

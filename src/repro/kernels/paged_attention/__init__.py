@@ -1,0 +1,6 @@
+"""Paged decode attention: page-table KV pool + scalar-prefetch gather."""
+from repro.kernels.paged_attention.ops import paged_attention  # noqa: F401
+from repro.kernels.paged_attention.ref import (  # noqa: F401
+    gather_pages,
+    paged_attention_ref,
+)

@@ -1,0 +1,40 @@
+"""Jitted wrapper for paged flash-decode, model layout in/out."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_fwd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "attn_softcap", "scale", "interpret"))
+def paged_attention(
+    q: jnp.ndarray,            # [B, 1, Hq, D] (model layout)
+    k_pool: jnp.ndarray,       # [P, page, Hkv, D] shared page pool
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,   # [B, maxp] int32 (unused slots -> 0)
+    lens,                      # [B] int32: valid tokens incl. current
+    *,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    B, _, Hq, D = q.shape
+    scale = D ** -0.5 if scale is None else scale
+    interpret = _interpret_default() if interpret is None else interpret
+    lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (B,))
+    out = paged_attention_fwd(
+        jnp.moveaxis(q, 2, 1), k_pool, v_pool, page_table, lens,
+        scale=scale, window=window, softcap=attn_softcap,
+        interpret=interpret)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Gathers each sequence's pages into a dense per-request view and runs the
+same masked-softmax math as the dense flash-decode oracle — the golden
+the Pallas page-table kernel is tested against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def gather_pages(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """[P, page, Hkv, D] pool + [B, maxp] table -> dense [B, maxp*page,
+    Hkv, D] view (junk beyond each sequence's length; callers mask)."""
+    B, maxp = page_table.shape
+    page, Hkv, D = pool.shape[1:]
+    out = pool[page_table]                     # [B, maxp, page, Hkv, D]
+    return out.reshape(B, maxp * page, Hkv, D)
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, lens, *, scale,
+                        window=0, softcap=0.0):
+    """q: [B, Hq, 1, D]; pools [P, page, Hkv, D]; page_table [B, maxp]
+    int32; lens [B] int32 (valid tokens incl. the current one).
+    -> [B, Hq, 1, D]."""
+    B, Hq, _, D = q.shape
+    k = gather_pages(k_pool, page_table)       # [B, S, Hkv, D]
+    v = gather_pages(v_pool, page_table)
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    kf = jnp.moveaxis(k, 2, 1).astype(jnp.float32)   # [B, Hkv, S, D]
+    vf = jnp.moveaxis(v, 2, 1).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, kf) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(S)[None, :]
+    mask = k_pos < lens[:, None]
+    if window > 0:
+        mask = mask & (k_pos > (lens[:, None] - 1 - window))
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, vf)
+    return o.reshape(B, Hq, 1, D).astype(q.dtype)

@@ -29,6 +29,15 @@ Queue order and preemption priority are pluggable via the
 fcfs|sjf|best-fit|arrival-aware``): ``sjf`` serves short requests first,
 shrinking padding and mean TTFT.
 
+``--backend paged`` (default) serves over the page-granular KV backend:
+fixed ``--page-size`` token blocks from a shared pool, per-request page
+tables, and ``--prefill-chunk``-token prefill slices interleaved with
+decode steps — requests join at any step, and admission books
+page-quantized KV demand (the estimator carries ``page_size`` through
+``ServingDemand``).  ``--backend dense`` keeps the deprecated
+slot-compacted cache (shared position, full-prompt prefill stalls) for
+comparison.
+
 ``--replicas N`` serves over N replica Nodes on the shared
 ``repro.sched.cluster`` runtime — each replica gets its own backend and
 the full per-replica budget, and arriving requests are routed by the
@@ -49,7 +58,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.sched import (ModelTarget, ResourceVector, available_placements,
                          available_routers, get_estimator)
-from repro.serve import Engine, JaxBackend, Request, ServingDemand
+from repro.serve import (Engine, JaxBackend, PagedJaxBackend, Request,
+                         ServingDemand, pages_for)
 
 #: estimators that make sense for a serving deployment (job-side ones
 #: like moe/oracle need an AppProfile target)
@@ -103,6 +113,18 @@ def main():
     ap.add_argument("--rate", type=float, default=0.0,
                     help="request arrival rate /s (0 = all at t=0)")
     ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--backend", default="paged",
+                    choices=("paged", "dense"),
+                    help="paged = block-granular KV + chunked prefill "
+                         "(joins any step); dense = deprecated "
+                         "slot-compacted shim (shared position)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size in tokens (paged backend); "
+                         "demand books page-quantized KV")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prefill chunk in tokens (paged backend): "
+                         "prompts prefill in chunks interleaved with "
+                         "decode steps")
     ap.add_argument("--replicas", type=int, default=1,
                     help="serving replicas (each gets its own backend "
                          "and the full per-replica budget)")
@@ -116,13 +138,15 @@ def main():
     cfg = get_config(args.arch, smoke=args.smoke)
     max_len = args.prompt_len + args.decode_steps + 1
 
+    page_size = args.page_size if args.backend == "paged" else 1
     estimator = get_estimator(args.estimator)
     estimate = estimator.estimate(ModelTarget(
         cfg, max_len,
         host_ram_per_req_gb=args.host_ram_per_req_gb
         if args.host_ram_gb > 0.0 else 0.0,
         net_gbps_per_req=args.net_gbps_per_req
-        if args.net_gbps > 0.0 else 0.0))
+        if args.net_gbps > 0.0 else 0.0,
+        page_size=page_size))
     if estimate.conservative:
         print(f"estimator {args.estimator!r}: conservative estimate "
               f"(KV slope padded x{estimate.info.get('pad')})")
@@ -136,8 +160,18 @@ def main():
 
     rng = np.random.default_rng(args.seed)
     requests = build_requests(args, rng)
-    backends = [JaxBackend(cfg, max_len=max_len, seed=args.seed + r)
-                for r in range(args.replicas)]
+    if args.backend == "paged":
+        # pool sized so max_batch worst-case requests can reserve, +1
+        # for the scratch page
+        num_pages = 1 + args.max_batch * pages_for(max_len, page_size)
+        backends = [PagedJaxBackend(cfg, num_pages=num_pages,
+                                    page_size=page_size,
+                                    prefill_chunk=args.prefill_chunk,
+                                    seed=args.seed + r)
+                    for r in range(args.replicas)]
+    else:
+        backends = [JaxBackend(cfg, max_len=max_len, seed=args.seed + r)
+                    for r in range(args.replicas)]
     engine = Engine(requests, demand, budget, mode=args.mode,
                     placement=args.placement, max_batch=args.max_batch,
                     replicas=args.replicas, router=args.router,
@@ -146,9 +180,12 @@ def main():
     axes = ", ".join(
         f"{a}={v:.3g}" + ("Gbps" if a == "net" else "GB")
         for a, v in budget.items())
+    kind = (f"paged (page={page_size}, chunk={args.prefill_chunk})"
+            if args.backend == "paged" else "dense (deprecated shim)")
     print(f"serving {args.requests} requests, mode={args.mode}, "
-          f"placement={args.placement}, replicas={args.replicas} "
-          f"(router={args.router}), budget/replica [{axes}]")
+          f"backend={kind}, placement={args.placement}, "
+          f"replicas={args.replicas} (router={args.router}), "
+          f"budget/replica [{axes}]")
     t0 = time.time()
     summary = engine.run()
     wall = time.time() - t0
@@ -167,6 +204,11 @@ def main():
     print(f"served {summary['completed']} requests / {tot} tokens in "
           f"{wall:.1f}s wall ({tot / max(wall, 1e-9):.1f} tok/s wall, "
           f"{summary['goodput_tok_s']:.1f} tok/s virtual)")
+    if args.backend == "paged":
+        waste = np.mean([be.waste_ratio() for be in backends])
+        print(f"paged KV: {waste:.1%} of resident page slots held no "
+              f"live token (dense shim would hold the full "
+              f"batch*max_len grid)")
 
 
 if __name__ == "__main__":

@@ -98,6 +98,37 @@ def attention(
     return out.reshape(B, Q, Hq, D).astype(q.dtype)
 
 
+def paged_decode_attention(
+    q: jnp.ndarray,            # [B, 1, Hq, D]
+    k_pool: jnp.ndarray,       # [P, page, Hkv, D] shared page pool
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,   # [B, maxp] int32 (unused slots -> page 0)
+    lens: jnp.ndarray,         # [B] int32: valid tokens incl. current
+    *,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    scale: Optional[float] = None,
+    use_pallas: bool = False,
+    f32_logits: bool = True,
+) -> jnp.ndarray:
+    """One-token attention against a page-table KV pool; each row has its
+    own length (no shared position counter)."""
+    if use_pallas:
+        from repro.kernels.paged_attention import ops as pa_ops
+        return pa_ops.paged_attention(
+            q, k_pool, v_pool, page_table, lens,
+            window=window, attn_softcap=attn_softcap, scale=scale)
+    from repro.kernels.paged_attention.ref import gather_pages
+    k = gather_pages(k_pool, page_table)       # [B, maxp*page, Hkv, D]
+    v = gather_pages(v_pool, page_table)
+    lens = jnp.asarray(lens, jnp.int32)
+    return attention(
+        q, k, v, causal=True,
+        q_positions=(lens - 1)[:, None], k_positions=jnp.arange(k.shape[1]),
+        kv_len=lens, window=window, attn_softcap=attn_softcap,
+        scale=scale, use_pallas=False, f32_logits=f32_logits)
+
+
 def decode_attention(
     q: jnp.ndarray,            # [B, 1, Hq, D]
     k_cache: jnp.ndarray,      # [B, S, Hkv, D]

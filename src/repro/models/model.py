@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import ssm as ssm_mod
-from repro.models.attention import attention, decode_attention
+from repro.models.attention import (attention, decode_attention,
+                                    paged_decode_attention)
 from repro.models.layers import mlp, rms_norm, softcap
 from repro.models.moe import moe_ffn
 from repro.models.params import P, abstract_params, init_params
@@ -558,6 +559,170 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         cache["k"] = mk((n_apps, batch, max_len, Hkv, hd), dt)
         cache["v"] = mk((n_apps, batch, max_len, Hkv, hd), dt)
     return cache
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, abstract_only: bool = False):
+    """Page-pool KV cache: a shared pool of fixed-size token pages plus a
+    per-request page table and length.  Page 0 is the scratch page —
+    unused table slots (and padding rows) point at it, so every gather
+    hits a valid page and garbage writes land harmlessly.
+
+    Layout: {"lens": [B], "table": [B, maxp], "k"/"v": [L, P, page, Hkv,
+    hd]} where maxp = num_pages - 1 upper-bounds any one request.
+    """
+    if cfg.family not in ("dense", "moe", "vlm") or cfg.local_global:
+        raise NotImplementedError(
+            f"paged KV cache supports dense-stack families, got "
+            f"{cfg.family} (local_global={cfg.local_global})")
+    dt = jnp.dtype(cfg.compute_dtype)
+    mk = (jax.ShapeDtypeStruct if abstract_only
+          else lambda s, d: jnp.zeros(s, d))
+    L, hd, Hkv = cfg.num_layers, cfg.head_dim, cfg.num_kv_heads
+    maxp = max(num_pages - 1, 1)
+    return {
+        "lens": mk((batch,), jnp.int32),
+        "table": mk((batch, maxp), jnp.int32),
+        "k": mk((L, num_pages, page_size, Hkv, hd), dt),
+        "v": mk((L, num_pages, page_size, Hkv, hd), dt),
+    }
+
+
+def _paged_kv_write(pool, new, table, positions, page_size):
+    """Scatter per-token k/v into the page pool.
+
+    pool: [P, page, Hkv, hd]; new: [B, S, Hkv, hd]; positions: [B, S]
+    absolute token positions; table: [B, maxp].  Rows whose position
+    maps to the scratch page (id 0) overwrite garbage only.
+    """
+    pids = jnp.take_along_axis(table, positions // page_size, axis=1)
+    offs = positions % page_size
+    return pool.at[pids, offs].set(new.astype(pool.dtype))
+
+
+def _paged_attn_block(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                      pools, table, write_table, positions, kv_lens, *,
+                      chunk_attend: bool):
+    """Pre-norm attention with residual over the page pool.
+
+    x: [B, S, d]; positions: [B, S] absolute positions of these tokens;
+    kv_lens: [B] total valid tokens after this write.  KV writes route
+    through ``write_table`` (inactive rows' tables are zeroed there, so
+    their writes land on the scratch page); gathers use the real
+    ``table``.  With ``chunk_attend`` the S chunk tokens attend causally
+    through the gathered pages (prefill chunks); otherwise S == 1 decode.
+    """
+    from repro.kernels.paged_attention.ref import gather_pages
+    from repro.models.layers import apply_rope
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    h = rms_norm(x, p["ln_w"], cfg.norm_eps, use_pallas=False)
+    q = jnp.einsum("bsd,dk->bsk", h, p["wq"]).reshape(
+        B, S, cfg.num_heads, hd)
+    k = jnp.einsum("bsd,dk->bsk", h, p["wk"]).reshape(
+        B, S, cfg.num_kv_heads, hd)
+    v = jnp.einsum("bsd,dk->bsk", h, p["wv"]).reshape(
+        B, S, cfg.num_kv_heads, hd)
+    q, k = _qk_normed(p, cfg, q, k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    page = pools[0].shape[1]
+    kp = _paged_kv_write(pools[0], k, write_table, positions, page)
+    vp = _paged_kv_write(pools[1], v, write_table, positions, page)
+    if chunk_attend:
+        kd = gather_pages(kp, table)           # [B, maxp*page, Hkv, hd]
+        vd = gather_pages(vp, table)
+        out = attention(
+            q, kd, vd, causal=True, q_positions=positions,
+            k_positions=jnp.arange(kd.shape[1]), kv_len=kv_lens,
+            attn_softcap=cfg.attn_softcap, scale=_attn_scale(cfg),
+            use_pallas=False, f32_logits=cfg.attn_f32_logits)
+    else:
+        out = paged_decode_attention(
+            q, kp, vp, table, kv_lens,
+            attn_softcap=cfg.attn_softcap, scale=_attn_scale(cfg),
+            use_pallas=cfg.use_pallas, f32_logits=cfg.attn_f32_logits)
+    out = jnp.einsum("bsk,kd->bsd",
+                     out.reshape(B, S, cfg.num_heads * hd), p["wo"])
+    if cfg.use_post_norm:
+        out = rms_norm(out, p["post_ln_w"], cfg.norm_eps)
+    return x + out, (kp, vp)
+
+
+def _paged_stack(params, cfg, x, cache, positions, kv_lens, active, *,
+                 chunk_attend: bool):
+    """Dense/moe/vlm stack over the page pool; pools ride scan xs just
+    like the dense cache's [L, B, ...] arrays ride theirs."""
+    table = cache["table"]
+    if active is None:
+        write_table = table
+    else:
+        write_table = jnp.where(jnp.asarray(active, bool)[:, None],
+                                table, 0)
+
+    def body(h, xs):
+        pb, pools = xs
+        h, npools = _paged_attn_block(
+            pb["attn"], cfg, h, pools, table, write_table, positions,
+            kv_lens, chunk_attend=chunk_attend)
+        if "moe" in pb:
+            h, _ = moe_block(pb["moe"], cfg, h, pb.get("shared_mlp"))
+        else:
+            h = mlp_block(pb["mlp"], cfg, h)
+        return h, npools
+
+    xs = (params["blocks"], (cache["k"], cache["v"]))
+    x, (nk, nv) = _scan(body, x, xs, cfg, "decode")
+    return x, {"k": nk, "v": nv, "table": table}
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, cache,
+                      token: jnp.ndarray, active=None):
+    """One-token decode over the paged cache; every row is at its own
+    position ``lens[b]``.  token: [B, 1] int32; active: optional [B]
+    bool — inactive rows (mid-prefill / padding) write to the scratch
+    page, keep their length, and produce garbage logits callers must
+    not read.  Returns (logits [B, 1, V], updated cache)."""
+    x = _embed(params, cfg, token)
+    positions = cache["lens"][:, None]          # [B, 1]
+    h, nc = _paged_stack(params, cfg, x, cache, positions,
+                         cache["lens"] + 1, active, chunk_attend=False)
+    nl = cache["lens"] + 1
+    if active is not None:
+        nl = jnp.where(jnp.asarray(active, bool), nl, cache["lens"])
+    nc["lens"] = nl
+    return _unembed(params, cfg, h), nc
+
+
+def prefill_chunk(params: Params, cfg: ModelConfig, cache,
+                  tokens: jnp.ndarray, start: jnp.ndarray,
+                  chunk_lens: jnp.ndarray, active=None):
+    """Process one prompt chunk per row, writing KV into the rows' pages.
+
+    tokens: [B, C] int32 (PAD-filled past each row's chunk); start: [B]
+    int32 absolute position of each row's first chunk token;
+    chunk_lens: [B] int32 valid tokens this chunk (<= C; short final
+    chunks PAD-fill the tail — those writes land beyond the row's
+    length inside its own pages, masked now and overwritten by the next
+    chunk or decode); active: optional [B] bool — inactive rows
+    (decoding / idle) write to the scratch page and keep their length.
+    Returns (logits at each row's last valid chunk token [B, 1, V],
+    cache with lens = start + chunk_lens for active rows).
+    """
+    x = _embed(params, cfg, tokens)
+    C = tokens.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    chunk_lens = jnp.asarray(chunk_lens, jnp.int32)
+    positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    h, nc = _paged_stack(params, cfg, x, cache, positions,
+                         start + chunk_lens, active, chunk_attend=True)
+    nl = start + chunk_lens
+    if active is not None:
+        nl = jnp.where(jnp.asarray(active, bool), nl, cache["lens"])
+    nc["lens"] = nl
+    last = jnp.take_along_axis(
+        h, jnp.maximum(chunk_lens - 1, 0)[:, None, None], axis=1)
+    return _unembed(params, cfg, last), nc
 
 
 def decode_step(params: Params, cfg: ModelConfig, cache, token: jnp.ndarray):

@@ -85,11 +85,15 @@ class JobTarget:
 @dataclass(frozen=True)
 class ModelTarget:
     """A serving deployment: model config + context length, plus the
-    per-request side-car intensities the deployment declares."""
+    per-request side-car intensities the deployment declares.
+    ``page_size`` is the KV allocation granularity in tokens (1 = dense
+    slot-per-token; > 1 = the paged backend's page quantum, which the
+    estimate exposes so admission books page-rounded demand)."""
     cfg: object
     max_len: int
     host_ram_per_req_gb: float = 0.0  # pinned host staging per request
     net_gbps_per_req: float = 0.0     # egress/interconnect per request
+    page_size: int = 1                # KV allocation granularity
 
 
 Target = Union[JobTarget, ModelTarget]
@@ -385,7 +389,8 @@ def _model_estimate(target: ModelTarget, *, pad: float = 1.0,
             "affine", 0.0, float(target.net_gbps_per_req))
     conf = {a: (0.0 if conservative else 1.0) for a in curves}
     info = {"family": "affine", "max_len": int(target.max_len),
-            "pad": pad}
+            "pad": pad,
+            "page_size": int(getattr(target, "page_size", 1))}
     return DemandEstimate(DemandModel(curves, primary_axis="hbm"),
                           conf, conservative, info)
 

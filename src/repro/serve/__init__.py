@@ -21,10 +21,16 @@ and ``launch/serve.py`` use.
   :class:`PrefixCurve`, lowest-priority preemption, ``forced`` progress
   floor) producing :class:`StepDecision` records.
 * ``backends`` — :class:`SimBackend` (virtual-time cost model for
-  benchmarks/tests) and :class:`JaxBackend` (real
+  benchmarks/tests) and :class:`JaxBackend` (the deprecated dense shim:
   ``build_prefill_step``/``build_decode_step`` over a slot-compacted KV
-  cache with bucketed padding, so re-batching does not recompile every
-  step).
+  cache with bucketed padding and shrink hysteresis, golden-pinned).
+* ``paged``   — page-granular KV backends: :class:`PageAllocator`
+  (free-list over fixed token pages, reservation + live ledgers),
+  :class:`PagedSimBackend` / :class:`DenseSimBackend` (virtual-time
+  paged-vs-dense residency comparison), and :class:`PagedJaxBackend`
+  (``build_prefill_chunk_step``/``build_paged_decode_step`` over a
+  shared page pool — chunked prefill interleaved with decode, joins at
+  any step, no shared position).
 * ``engine``  — :class:`Engine`: the serving loop as ``step`` events on
   the shared :class:`~repro.sched.cluster.ClusterRuntime` — 1..N
   replica Nodes (per-replica budget + backend) with arrivals routed by
@@ -50,6 +56,13 @@ from repro.serve.backends import (  # noqa: F401
     Backend,
     JaxBackend,
     SimBackend,
+)
+from repro.serve.paged import (  # noqa: F401
+    DenseSimBackend,
+    PageAllocator,
+    PagedJaxBackend,
+    PagedSimBackend,
+    pages_for,
 )
 from repro.serve.engine import MODES, Engine  # noqa: F401
 from repro.serve.metrics import ServingMetrics  # noqa: F401

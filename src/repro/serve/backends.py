@@ -25,8 +25,10 @@ Dense-cache alignment: the model's cache keeps ONE shared position
 counter, so a joiner's context is left-padded to the running position
 (its tokens occupy the tail).  Joining is therefore only possible while
 ``prefill_len <= position`` and ``position + remaining_new <= max_len``
-— the ``joinable`` predicate the engine passes to the queue.  A paged
-KV-cache lifts this; see ROADMAP follow-ons.
+— the ``joinable`` predicate the engine passes to the queue.  The
+page-granular backends in ``repro.serve.paged`` lift this constraint
+(per-request lengths, chunked prefill); ``JaxBackend`` remains the
+deprecated dense shim, golden-pinned per the standing contract.
 """
 from __future__ import annotations
 
@@ -54,6 +56,33 @@ class Backend:
 
     def joinable(self, req: Request) -> bool:
         return True
+
+    def filter_joinable(self, pending: Sequence[Request]
+                        ) -> List[Request]:
+        """Pending requests this backend can join mid-stream, in the
+        given (placement) order.  Backends with a *collective* join
+        constraint (e.g. a shared page pool) override this; the default
+        applies the per-request ``joinable`` predicate."""
+        return [r for r in pending if self.joinable(r)]
+
+    def restart_cohort(self, pending: Sequence[Request]
+                       ) -> List[Request]:
+        """Empty-backend restart: the greedy prefix of ``pending`` that
+        can restart together.  The dense default packs a shared position
+        window (max prefill + max remaining <= max_len); stateless
+        backends take everything."""
+        max_len = getattr(self, "max_len", None)
+        if max_len is None:
+            return list(pending)
+        out: List[Request] = []
+        maxp = maxr = 0
+        for r in pending:
+            p = max(maxp, r.prefill_len)
+            n = max(maxr, r.remaining_new)
+            if p + n <= max_len:
+                out.append(r)
+                maxp, maxr = p, n
+        return out
 
     def join(self, reqs: Sequence[Request], now: float) -> float:
         raise NotImplementedError
@@ -111,6 +140,21 @@ def _bucket(n: int) -> int:
     return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
 
 
+def _shrink_bucket(cap: int, n: int, streak: int,
+                   patience: int) -> tuple:
+    """Bucket shrink hysteresis: a membership drop only re-buckets the
+    batch axis down after ``patience`` consecutive shrink-eligible
+    removals, so a join/finish cycle sitting on a power-of-two edge
+    stops recompiling every step.  Returns ``(new_cap, new_streak)``."""
+    target = _bucket(max(n, 1))
+    if target >= cap:
+        return cap, 0
+    streak += 1
+    if streak >= patience:
+        return target, 0
+    return cap, streak
+
+
 class JaxBackend(Backend):
     """Real prefill/decode over a slot-compacted, bucket-padded cache.
 
@@ -121,7 +165,8 @@ class JaxBackend(Backend):
 
     def __init__(self, cfg, params=None, max_len: int = 256,
                  sync: int = 16, seed: int = 0,
-                 step_time: Optional[SimBackend] = None):
+                 step_time: Optional[SimBackend] = None,
+                 shrink_patience: int = 4):
         import jax
         from repro.models import model as model_lib
         from repro.train.step import build_decode_step, build_prefill_step
@@ -141,6 +186,8 @@ class JaxBackend(Backend):
         self._cache = None
         self._last = None          # [cap, 1] int32 last tokens
         self._pos = 0
+        self.shrink_patience = max(int(shrink_patience), 1)
+        self._shrink_streak = 0
         # virtual time for deterministic schedules; wall time is
         # reported separately by the engine's metrics
         self._timer = step_time or SimBackend()
@@ -212,8 +259,6 @@ class JaxBackend(Backend):
         reqs = list(reqs)
         if not reqs:
             return 0.0
-        cost = self._timer.t_prefill_per_token * sum(
-            r.prefill_len for r in reqs)
         if not self._slots:
             # (re)start: position = longest prefill, rounded up to the
             # sync quantum so restart shapes stay bucketed too — but
@@ -223,11 +268,16 @@ class JaxBackend(Backend):
             maxr = max(r.remaining_new for r in reqs)
             pos = -(-need // self.join_stride) * self.join_stride
             self._pos = max(min(pos, self.max_len - maxr), need)
+            # the batch prefills EVERY row to the padded position, not
+            # to its raw prefill length — charge what actually runs
+            cost = self._timer.t_prefill_per_token * self._pos * len(reqs)
             self._cache, self._last = self._prefill_batch(reqs, self._pos)
             self._slots = reqs
+            self._shrink_streak = 0
             self._emit_prefill_tokens(reqs, self._last)
             return cost
         assert all(self.joinable(r) for r in reqs)
+        cost = self._timer.t_prefill_per_token * self._pos * len(reqs)
         new_cache, new_last = self._prefill_batch(reqs, self._pos)
         n_old, n_new = len(self._slots), len(reqs)
         cap = _bucket(n_old + n_new)
@@ -251,6 +301,7 @@ class JaxBackend(Backend):
             [self._last[:n_old], new_last[:n_new],
              self._last[n_old + n_new:]], axis=0)
         self._slots = self._slots + reqs
+        self._shrink_streak = 0
         self._emit_prefill_tokens(reqs, new_last)
         return cost
 
@@ -277,8 +328,11 @@ class JaxBackend(Backend):
         self._slots = [self._slots[i] for i in keep]
         if not self._slots:
             self._cache, self._last, self._pos = None, None, 0
+            self._shrink_streak = 0
             return
-        cap = _bucket(len(self._slots))
+        cap, self._shrink_streak = _shrink_bucket(
+            self._last.shape[0], len(self._slots),
+            self._shrink_streak, self.shrink_patience)
         idx = np.asarray(keep + [keep[0]] * (cap - len(keep)))
         self._cache = self._cache_rows(self._cache, idx)
         import jax.numpy as jnp

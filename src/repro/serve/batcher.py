@@ -77,6 +77,12 @@ class PrefixCurve:
         return float(k + min(max(frac, 0.0), 1.0 - 1e-12))
 
 
+#: axes ServingDemand computes itself — an estimator must not leak
+#: these through ``extra_axes`` (it would silently overwrite the KV
+#: and staging terms in ``request_vector``)
+RESERVED_AXES = ("hbm", "host_ram")
+
+
 @dataclass
 class ServingDemand:
     """Per-request serving footprint derived from a calibrated demand
@@ -85,16 +91,36 @@ class ServingDemand:
     (intercept, amortized across the batch) and KV at full length
     (slope), from which the per-token KV slice follows.  ``extra_axes``
     carries any other per-request side-car constants (e.g. ``net``
-    egress bandwidth) the estimate predicted."""
+    egress bandwidth) the estimate predicted.
+
+    ``page_size > 1`` books **page-quantized** KV — a request holding
+    ``c`` context tokens occupies ``ceil(c / page) * page`` KV slots,
+    matching the paged backends' physical allocation granularity
+    (``page_size = 1`` is the exact dense-token model and keeps every
+    pre-paging schedule bit-identical)."""
 
     weights_gb: float           # resident once, however many requests
     kv_gb_per_token: float      # per request, per context token
     host_ram_per_req_gb: float = 0.0  # pinned host staging per request
     extra_axes: Dict[str, float] = field(default_factory=dict)
+    page_size: int = 1          # KV allocation granularity in tokens
+
+    def __post_init__(self):
+        leaked = sorted(set(self.extra_axes) & set(RESERVED_AXES))
+        if leaked:
+            raise ValueError(
+                f"extra_axes must not carry reserved axes {leaked} — "
+                f"hbm/host_ram are computed from kv_gb_per_token and "
+                f"host_ram_per_req_gb; a leaking estimator would "
+                f"silently overwrite them")
+        if int(self.page_size) < 1:
+            raise ValueError(f"page_size must be >= 1, "
+                             f"got {self.page_size}")
+        self.page_size = int(self.page_size)
 
     @classmethod
-    def from_demand_model(cls, dm: DemandModel, max_len: int
-                          ) -> "ServingDemand":
+    def from_demand_model(cls, dm: DemandModel, max_len: int,
+                          page_size: int = 1) -> "ServingDemand":
         fn = dm.primary_fn
         if fn is None or getattr(fn, "family", None) != "affine":
             raise ValueError(
@@ -107,14 +133,24 @@ class ServingDemand:
                    kv_gb_per_token=float(fn.b) / float(max_len),
                    host_ram_per_req_gb=float(host.b)
                    if host is not None else 0.0,
-                   extra_axes=extra)
+                   extra_axes=extra, page_size=page_size)
 
     @classmethod
     def from_estimate(cls, estimate, max_len: int) -> "ServingDemand":
         """Build from a :class:`~repro.sched.estimator.DemandEstimate`
         (the registry path: ``get_estimator("kv-growth").estimate(
-        ModelTarget(cfg, max_len, ...))``)."""
-        return cls.from_demand_model(estimate.model, max_len)
+        ModelTarget(cfg, max_len, ...))``).  The estimator's declared
+        page size carries through, so booked demand is quantized the
+        way the paged backend actually allocates."""
+        return cls.from_demand_model(
+            estimate.model, max_len,
+            page_size=int(estimate.info.get("page_size", 1)))
+
+    def kv_gb(self, tokens: int) -> float:
+        """KV footprint of ``tokens`` context tokens, rounded up to the
+        allocation granularity (whole pages)."""
+        pages = -(-max(int(tokens), 0) // self.page_size)
+        return self.kv_gb_per_token * pages * self.page_size
 
     def per_request_axes(self) -> Dict[str, float]:
         """Per-request side-car constants on every non-KV axis (what a
@@ -128,8 +164,7 @@ class ServingDemand:
                        ) -> ResourceVector:
         """Marginal demand of ``req`` holding ``context + extra_tokens``
         KV slots (weights excluded — they are booked once, below)."""
-        axes = {"hbm": self.kv_gb_per_token
-                * (req.context_len + extra_tokens)}
+        axes = {"hbm": self.kv_gb(req.context_len + extra_tokens)}
         if self.host_ram_per_req_gb > 0.0:
             axes["host_ram"] = self.host_ram_per_req_gb
         axes.update(self.extra_axes)
@@ -285,8 +320,7 @@ class ContinuousBatcher:
         side-car axis (host staging RAM, net egress) joins as a linear
         curve so it can bind the inverse too."""
         curves: Dict[str, object] = {"hbm": PrefixCurve(
-            [self.demand.kv_gb_per_token * (r.context_len + 2)
-             for r in cands])}
+            [self.demand.kv_gb(r.context_len + 2) for r in cands])}
         for axis, per_req in self.demand.per_request_axes().items():
             curves[axis] = MemoryFunction("affine", 0.0, per_req)
         return DemandModel(curves, primary_axis="hbm")

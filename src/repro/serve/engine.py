@@ -29,12 +29,14 @@ schedules and metrics on any machine; the jax backend's real compute
 rides inside those steps.
 
 Termination is structural, not best-effort: every planned step decodes
-one token of at least one request (and tokens, once decoded, survive
+one token — or, on chunked-prefill backends, advances one prefill
+chunk — of at least one request (and tokens, once decoded, survive
 preemption via recompute), and every idle wake either consumes a future
 arrival or ends that replica's event chain, so the loop runs at most
-``sum(max_new_tokens) + replicas * len(requests)`` planned steps —
-a preemption storm cannot live-lock.  ``max_steps`` is an assertion
-backstop on that bound, not a tuning knob.
+``sum(max_new_tokens) + replicas * len(requests)`` planned steps
+(scaled by the worst per-admission chunk count when a backend prefills
+in chunks) — a preemption storm cannot live-lock.  ``max_steps`` is an
+assertion backstop on that bound, not a tuning knob.
 """
 from __future__ import annotations
 
@@ -141,9 +143,21 @@ class Engine:
         for r in self.requests:
             self.metrics.record_request(r)
         # structural bound: one decoded token per planned step minimum,
-        # plus one idle-advance per (arrival, replica) pair
-        self.max_steps = sum(r.max_new_tokens for r in self.requests) \
+        # plus one idle-advance per (arrival, replica) pair.  Chunked
+        # prefill relaxes "one token per step" to "one token OR one
+        # prefill chunk per step": between productive units a request
+        # consumes at most ceil(context / chunk) chunk-only steps, so
+        # the bound scales by that factor.
+        base_bound = sum(r.max_new_tokens for r in self.requests) \
             + self.replicas * len(self.requests) + 8
+        chunk_mult = 1
+        for be in self.backends:
+            chunk = getattr(be, "prefill_chunk", 0)
+            if chunk and self.requests:
+                worst = max(-(-(r.prompt_len + r.max_new_tokens) // chunk)
+                            for r in self.requests)
+                chunk_mult = max(chunk_mult, 1 + worst)
+        self.max_steps = base_bound * chunk_mult
         # per-replica scheduling state (continuous mode)
         self._pending: List[List[Request]] = \
             [[] for _ in range(self.replicas)]
@@ -181,20 +195,11 @@ class Engine:
                 backend.position % backend.join_stride:
             return []  # joins quantize to the backend's sync points
         if backend.empty:
-            # empty batch restarts: greedy cohort whose shared position
-            # window fits everyone (max prefill + max remaining <= cap)
-            max_len = getattr(backend, "max_len", None)
-            if max_len is None:
-                return pending
-            out, maxp, maxr = [], 0, 0
-            for r in pending:
-                p = max(maxp, r.prefill_len)
-                n = max(maxr, r.remaining_new)
-                if p + n <= max_len:
-                    out.append(r)
-                    maxp, maxr = p, n
-            return out
-        return [r for r in pending if backend.joinable(r)]
+            # empty batch restarts: the backend picks the cohort that
+            # can physically restart together (dense: greedy shared
+            # position window; paged: page reservations)
+            return backend.restart_cohort(pending)
+        return backend.filter_joinable(pending)
 
     # --- shared step application -----------------------------------------
     def _apply(self, plan: StepDecision, ridx: int, now: float) -> float:
@@ -285,7 +290,9 @@ class Engine:
         t_end = t + dt
         self._step_no += 1
         for r in running:
-            if r.first_token_t is None:
+            # chunked-prefill backends keep a request running before it
+            # has emitted anything; TTFT stamps only once a token exists
+            if r.first_token_t is None and r.tokens_decoded:
                 r.first_token_t = t_end
         self._retire(ridx, t_end)
         self._sync_node(ridx)
@@ -312,7 +319,7 @@ class Engine:
         lmax = max(r.prefill_len + r.remaining_new for r in cands)
         curves = {"hbm": MemoryFunction(
             "affine", self.demand.weights_gb,
-            self.demand.kv_gb_per_token * lmax)}
+            self.demand.kv_gb(lmax))}
         for axis, per_req in self.demand.per_request_axes().items():
             curves[axis] = MemoryFunction("affine", 0.0, per_req)
         dm = DemandModel(curves, primary_axis="hbm")

@@ -217,3 +217,86 @@ def test_model_attention_uses_flash_when_enabled():
     h2, _ = model.forward_train(params, cfg.replace(use_pallas=True),
                                 {"tokens": tokens})
     np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+def _paged_case(B, P, page, Hq, Hkv, D, lens, dtype=jnp.float32, seed=0):
+    """Random pool + a page table whose live entries are distinct pages
+    (shuffled, so physical order != logical order) and whose parked
+    slots point at scratch page 0."""
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(0, 1, (B, 1, Hq, D)), dtype)
+    kp = jnp.asarray(r.normal(0, 1, (P, page, Hkv, D)), dtype)
+    vp = jnp.asarray(r.normal(0, 1, (P, page, Hkv, D)), dtype)
+    maxp = -(-max(lens) // page)
+    perm = list(r.permutation(np.arange(1, P)))
+    table = np.zeros((B, maxp), np.int32)
+    for b, ln in enumerate(lens):
+        need = -(-ln // page)
+        for i in range(need):
+            table[b, i] = perm.pop()
+    return q, kp, vp, jnp.asarray(table), jnp.asarray(lens, jnp.int32)
+
+
+def test_paged_attention_smoke():
+    """One fast interpret-mode case; the full sweep is tier-2 (each
+    distinct shape recompiles the Pallas interpreter)."""
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    B, P, page, Hq, Hkv, D = 2, 16, 8, 4, 2, 16
+    q, kp, vp, table, ln = _paged_case(B, P, page, Hq, Hkv, D, [5, 23])
+    out = paged_attention(q, kp, vp, table, ln)
+    ref = jnp.moveaxis(paged_attention_ref(
+        jnp.moveaxis(q, 2, 1), kp, vp, table, ln, scale=D ** -0.5), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("B,P,page,Hq,Hkv,D,lens", [
+    (2, 16, 8, 4, 2, 16, [5, 23]),     # partial pages, GQA
+    (1, 8, 16, 2, 1, 32, [48]),        # MQA, exact page multiple
+    (3, 32, 4, 8, 8, 64, [1, 9, 17]),  # MHA, tiny pages
+    (2, 16, 8, 6, 3, 48, [12, 31]),    # odd head counts / head dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(B, P, page, Hq, Hkv, D, lens, dtype):
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    q, kp, vp, table, ln = _paged_case(B, P, page, Hq, Hkv, D, lens, dtype)
+    out = paged_attention(q, kp, vp, table, ln)
+    ref = jnp.moveaxis(paged_attention_ref(
+        jnp.moveaxis(q, 2, 1), kp, vp, table, ln, scale=D ** -0.5), 1, 2)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("window,softcap", [(16, 0.0), (0, 30.0), (8, 50.0)])
+def test_paged_attention_variants(window, softcap):
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    B, P, page, Hq, Hkv, D = 2, 16, 8, 4, 2, 32
+    q, kp, vp, table, ln = _paged_case(B, P, page, Hq, Hkv, D, [21, 37])
+    out = paged_attention(q, kp, vp, table, ln, window=window,
+                          attn_softcap=softcap)
+    ref = jnp.moveaxis(paged_attention_ref(
+        jnp.moveaxis(q, 2, 1), kp, vp, table, ln, scale=D ** -0.5,
+        window=window, softcap=softcap), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_matches_dense_gather_path():
+    """Pallas paged kernel agrees with the model's gather-then-dense
+    paged_decode_attention (the XLA fallback the backends default to)."""
+    from repro.models.attention import paged_decode_attention
+    B, P, page, Hq, Hkv, D = 2, 16, 8, 4, 2, 16
+    q, kp, vp, table, ln = _paged_case(B, P, page, Hq, Hkv, D, [11, 29])
+    a = paged_decode_attention(q, kp, vp, table, ln, use_pallas=True)
+    b = paged_decode_attention(q, kp, vp, table, ln, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -31,6 +31,15 @@ Nodes and compares the selected router against the ``single`` routing
 baseline — routed goodput must beat single-node goodput, which is the
 acceptance bar for multi-replica routing being real.
 
+The topology cell binds a ``repro.sched.topology`` two-rack fabric
+with one NARROW rack uplink and streams a bursty trace whose prompt
+payloads ride real ingress Transmissions: ``topo-aware`` routing
+(bottleneck-link path headroom) + KV migration on eviction must
+STRICTLY beat the topology-blind ``net-aware`` router with local
+requeue on SLO goodput, and at least one migration must fire.  Its
+numbers land in ``BENCH_topology.json`` at the repo root (SLO goodput
+both cells, migration count, p99 KV transfer time).
+
     PYTHONPATH=src python -m benchmarks.run --bench serving_bench
     PYTHONPATH=src python -m benchmarks.run --smoke --bench serving_bench
     PYTHONPATH=src python -m benchmarks.run --smoke --replicas 2 \
@@ -79,8 +88,28 @@ ROUTER = os.environ.get("REPRO_SERVE_ROUTER", "net-aware")
 NET_GBPS_PER_REQ = 0.1
 NET_BUDGET_GBPS = 0.25          # per replica: ~2 concurrent requests
 
+# --- the network-topology cell (repro.sched.topology) ----------------------
+# a 2-rack cell with one NARROW rack uplink: prompt payloads ride real
+# ingress Transmissions, so a topology-blind router that lands half the
+# deliveries behind the slow uplink pays the TTFT SLO for it
+TOPO_REPLICAS = 4
+TOPO_RATE = 120.0               # bursty: arrivals outrun delivery
+TOPO_GBPS = 10.0                # intra-rack links
+TOPO_UPLINKS = (0.2, 4.0)       # rack0 is the narrow one
+TOPO_INGRESS_GB_PER_TOKEN = 2e-3
+TOPO_NET_BUDGET_GBPS = 1.0      # roomy: delivery, not egress, binds
+TOPO_KV_MULT = 2.5              # tight HBM: decode growth preempts
+TOPO_PREFILL_S_PER_TOKEN = 2e-3  # recompute dear enough to migrate
+# looser than the sweep's TTFT SLO: compute queueing on the preferred
+# rack passes, multi-second deliveries behind the narrow uplink do not
+TOPO_TTFT_SLO_S = 0.5
+BENCH_TOPOLOGY_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_topology.json")
 
-def _requests(n: int, rate: float, seed: int):
+
+def _requests(n: int, rate: float, seed: int,
+              ttft: float = TTFT_SLO_S):
     from repro.serve import Request
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, size=n)
@@ -91,7 +120,7 @@ def _requests(n: int, rate: float, seed: int):
                     max_new_tokens=int(rng.integers(MAX_NEW // 4,
                                                     MAX_NEW + 1)),
                     arrival=float(t[i]),
-                    ttft_deadline=TTFT_SLO_S,
+                    ttft_deadline=ttft,
                     tpot_deadline=TPOT_SLO_S)
             for i in range(n)]
 
@@ -186,6 +215,38 @@ def _run_replicated(router: str, replicas: int):
     return summary
 
 
+def _run_topology_cell(router: str, migrate: bool):
+    """One bursty run on the asymmetric two-rack fabric.  Same trace,
+    demand, budget and backends for every router — only where requests
+    land (and whether evicted KV may move) differs."""
+    from repro.sched import get_topology
+    from repro.sched.resources import ResourceVector
+    from repro.serve import Engine, ServingDemand, SimBackend
+
+    full_ctx = PROMPT_LEN + MAX_NEW
+    demand = ServingDemand(
+        weights_gb=WEIGHTS_GB, kv_gb_per_token=KV_GB_PER_TOKEN,
+        extra_axes={"net": NET_GBPS_PER_REQ})
+    budget = ResourceVector(
+        hbm=WEIGHTS_GB + KV_GB_PER_TOKEN * full_ctx * TOPO_KV_MULT,
+        net=TOPO_NET_BUDGET_GBPS)
+    topo = get_topology("two-rack", nodes=TOPO_REPLICAS,
+                        gbps=TOPO_GBPS, uplink_gbps=TOPO_UPLINKS)
+    backends = [SimBackend(
+        t_prefill_per_token=TOPO_PREFILL_S_PER_TOKEN)
+        for _ in range(TOPO_REPLICAS)]
+    engine = Engine(_requests(N_REQUESTS, TOPO_RATE, SEED + 2,
+                              ttft=TOPO_TTFT_SLO_S), demand,
+                    budget, mode="continuous", placement="fcfs",
+                    max_batch=32, replicas=TOPO_REPLICAS, router=router,
+                    backends=backends, topology=topo, migrate=migrate,
+                    ingress_gb_per_token=TOPO_INGRESS_GB_PER_TOKEN)
+    summary = engine.run()
+    for dec in engine.metrics.steps:
+        assert dec.booked.fits(dec.budget) or dec.forced, dec
+    return summary
+
+
 def main() -> dict:
     payload: dict = {"cells": []}
     worst = np.inf
@@ -272,6 +333,47 @@ def main() -> dict:
     payload["replicas"] = {
         "replicas": REPLICAS, "router": ROUTER,
         "routed": routed, "single": single, "ratio": route_ratio}
+
+    # --- topology: topo-aware + KV migration vs net-aware + local requeue --
+    topo = _run_topology_cell("topo-aware", migrate=True)
+    blind = _run_topology_cell("net-aware", migrate=False)
+    topo_ratio = topo["slo_goodput_tok_s"] \
+        / max(blind["slo_goodput_tok_s"], 1e-12)
+    spread = " ".join(f"n{n}:{c}" for n, c in
+                      sorted(topo["node_steps"].items()))
+    emit("serving/topology/topo_aware_slo_goodput",
+         f"{topo['slo_goodput_tok_s']:.1f}",
+         f"migrations {topo['migrations']}, step spread [{spread}]")
+    emit("serving/topology/net_aware_slo_goodput",
+         f"{blind['slo_goodput_tok_s']:.1f}",
+         "topology-blind baseline, local requeue on eviction")
+    emit("serving/topology/slo_ratio", f"{topo_ratio:.3f}",
+         "topo-aware+migrate / net-aware+requeue on the 2-rack fabric")
+    emit("serving/topology/kv_transfer_p99_ms",
+         f"{topo['kv_transfer_p99_s'] * 1e3:.2f}",
+         f"{topo['migrations']} migrated KV transfer(s)")
+    topo_payload = {
+        "replicas": TOPO_REPLICAS, "uplink_gbps": list(TOPO_UPLINKS),
+        "rate": TOPO_RATE, "n_requests": N_REQUESTS, "smoke": SMOKE,
+        "topo_aware": {
+            "goodput_tok_s": topo["goodput_tok_s"],
+            "slo_goodput_tok_s": topo["slo_goodput_tok_s"],
+            "slo_attainment": topo["slo_attainment"],
+            "preemptions": topo["preemptions"],
+            "migrations": topo["migrations"],
+            "kv_transfer_p99_s": topo["kv_transfer_p99_s"]},
+        "net_aware": {
+            "goodput_tok_s": blind["goodput_tok_s"],
+            "slo_goodput_tok_s": blind["slo_goodput_tok_s"],
+            "slo_attainment": blind["slo_attainment"],
+            "preemptions": blind["preemptions"],
+            "migrations": blind["migrations"]},
+        "slo_ratio": topo_ratio}
+    payload["topology"] = topo_payload
+    with open(BENCH_TOPOLOGY_JSON, "w") as f:
+        json.dump(topo_payload, f, indent=1, default=float)
+    emit("serving/topology/pinned", BENCH_TOPOLOGY_JSON,
+         "SLO goodput + migrations + p99 transfer, both routers")
     save_result("serving_bench", payload)
 
     if worst < 0.99:
@@ -300,6 +402,20 @@ def main() -> dict:
                 f"kv_mult={c['kv_mult']}: "
                 f"{c['paged']['goodput_tok_s']:.1f} vs dense "
                 f"{c['dense']['goodput_tok_s']:.1f} tok/s")
+    # the topology acceptance bar: on the contended 2-rack fabric,
+    # path-headroom routing + KV migration must STRICTLY beat the
+    # topology-blind router with local requeue on SLO goodput, and
+    # migration must actually fire
+    if topo["slo_goodput_tok_s"] <= blind["slo_goodput_tok_s"]:
+        raise AssertionError(
+            f"topo-aware+migrate did not beat net-aware+requeue on SLO "
+            f"goodput over the asymmetric 2-rack fabric: "
+            f"{topo['slo_goodput_tok_s']:.1f} vs "
+            f"{blind['slo_goodput_tok_s']:.1f} tok/s")
+    if topo["migrations"] < 1:
+        raise AssertionError(
+            "no KV migration fired in the topology cell — the "
+            "migrate-vs-recompute path is dead")
     return payload
 
 

@@ -124,6 +124,17 @@ class SimConfig:
     # "" = wrap the policy's own predictor — bit-identical to the
     # pre-estimator behaviour
     estimator: str = field(default_factory=_default_estimator)
+    # --- network topology (repro.sched.topology) ----------------------
+    # preset name ("single-switch" / "two-rack" / "ring"); "" = no
+    # fabric — every pre-topology schedule stays bit-identical.  With a
+    # fabric bound and stage_gb_per_item > 0, each spawned executor's
+    # input stages from the topology's ingress as a real Transmission
+    # and the executor only starts processing when its last byte lands
+    # (net contention now costs virtual time, not a closed-form curve)
+    topology: str = ""
+    stage_gb_per_item: float = 0.0
+    topology_gbps: float = 10.0
+    topology_latency_s: float = 0.0
 
     def host_capacity(self) -> ResourceVector:
         """Per-host capacity vector: the primary memory axis, the CPU
@@ -234,6 +245,14 @@ class Simulator:
         # is a thin shim over runtime.run — results are pinned
         # bit-identical to the pre-runtime loop by tests/test_cluster.py
         self.runtime = ClusterRuntime(self.cluster)
+        self.topology = None
+        if cfg.topology:
+            from repro.sched.topology import get_topology
+            self.topology = get_topology(
+                cfg.topology, nodes=cfg.n_hosts,
+                gbps=cfg.topology_gbps,
+                latency_s=cfg.topology_latency_s).attach(self.runtime)
+            self.runtime.topology = self.topology
         self.runtime.on("arrive", self._on_arrive)
         self.runtime.on("profiled", self._on_profiled)
         for kind in ("finish", "wake", "oom"):
@@ -343,8 +362,35 @@ class Simulator:
             waste = (self.cfg.oom_waste_frac * items
                      / max(job.app.rate, 1e-12))
             self._push(self.t + waste, "oom", (e, e.version))
+        self._stage_input(e, items)
         self._advance_host(host)
         return e
+
+    def _stage_input(self, e: Executor, items: float) -> None:
+        """With a topology bound, the executor's input chunk rides the
+        fabric from the ingress before any item processes: park it
+        (``delay_until = inf`` — ``_rate`` reads 0) until the staging
+        Transmission's last byte lands, then release and re-time.  The
+        parked wake-at-inf event is superseded by the version bump, the
+        usual stale-event discipline."""
+        if self.topology is None or self.cfg.stage_gb_per_item <= 0.0:
+            return
+        dst = f"n{e.host.hid}"
+        if not self.topology.has_node(dst) \
+                or self.topology.ingress is None:
+            return
+        e.delay_until = float("inf")
+
+        def staged(t, tr, e=e):
+            if e not in e.host.execs:
+                return            # OOM-killed / failed while staging
+            e.delay_until = t
+            self._advance_host(e.host)
+
+        self.topology.transmit(
+            self.topology.ingress, dst,
+            items * self.cfg.stage_gb_per_item, now=self.t,
+            tag="stage", on_complete=staged)
 
     def _remove_exec(self, e: Executor, requeue_items: float):
         if e in e.host.execs:

@@ -40,10 +40,19 @@ comparison.
 
 ``--replicas N`` serves over N replica Nodes on the shared
 ``repro.sched.cluster`` runtime — each replica gets its own backend and
-the full per-replica budget, and arriving requests are routed by the
-``--router`` registry entry (``single`` / ``least-loaded`` /
-``net-aware``; the net-aware router spreads load over the replicas'
-``net``-axis headroom when ``--net-gbps`` budgets it).
+the full per-replica budget (``--replica-hbm 8,8,4`` makes the cell
+heterogeneous), and arriving requests are routed by the ``--router``
+registry entry (``single`` / ``least-loaded`` / ``net-aware`` /
+``topo-aware``; the deprecated net-aware router spreads load over the
+replicas' ``net``-axis headroom when ``--net-gbps`` budgets it).
+
+``--topology two-rack`` binds a ``repro.sched.topology`` preset: prompt
+payloads ride real ingress :class:`Transmission` events
+(``--ingress-gb-per-token``), the ``topo-aware`` router scores
+bottleneck-link path headroom, ``--migrate`` lets preempted requests
+move their KV to another replica when the modeled transfer beats local
+recompute, and observed transmissions feed the estimator's measured net
+curve after the run.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 8 --decode-steps 16
@@ -57,7 +66,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.sched import (ModelTarget, ResourceVector, available_placements,
-                         available_routers, get_estimator)
+                         available_routers, available_topologies,
+                         get_estimator, get_topology)
 from repro.serve import (Engine, JaxBackend, PagedJaxBackend, Request,
                          ServingDemand, pages_for)
 
@@ -132,6 +142,28 @@ def main():
                     choices=available_routers(),
                     help="how arriving requests are routed to replicas "
                          "(repro.sched.cluster registry)")
+    ap.add_argument("--topology", default="",
+                    choices=("",) + available_topologies(),
+                    help="bind a network preset (repro.sched.topology): "
+                         "prompts ride real ingress Transmissions and "
+                         "the topo-aware router scores path headroom; "
+                         "'' = no fabric (bit-identical legacy "
+                         "schedules)")
+    ap.add_argument("--migrate", action="store_true",
+                    help="preempted requests may migrate their KV to "
+                         "another replica when the modeled transfer "
+                         "beats local recompute (needs --topology; "
+                         "real-cache jax backends cannot adopt foreign "
+                         "KV, so they always recompute)")
+    ap.add_argument("--ingress-gb-per-token", type=float, default=0.0,
+                    help="prompt payload GB per token staged from the "
+                         "topology ingress (0 = prompts appear "
+                         "instantly, pre-topology behaviour)")
+    ap.add_argument("--replica-hbm", default="",
+                    help="comma-separated per-replica HBM capacities in "
+                         "GB, e.g. '8,8,4' — a heterogeneous cell "
+                         "(must list exactly --replicas values; "
+                         "overrides --budget-gb per node)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -158,6 +190,21 @@ def main():
         budget_axes["net"] = float(args.net_gbps)
     budget = ResourceVector(**budget_axes)
 
+    budgets = None
+    if args.replica_hbm:
+        hbm = [float(v) for v in args.replica_hbm.split(",")]
+        if len(hbm) != args.replicas:
+            ap.error(f"--replica-hbm lists {len(hbm)} values for "
+                     f"--replicas {args.replicas}")
+        budgets = [ResourceVector(**{**budget_axes, "hbm": h})
+                   for h in hbm]
+
+    topology = None
+    if args.topology:
+        topology = get_topology(args.topology, nodes=args.replicas)
+    elif args.migrate:
+        ap.error("--migrate needs --topology")
+
     rng = np.random.default_rng(args.seed)
     requests = build_requests(args, rng)
     if args.backend == "paged":
@@ -175,7 +222,10 @@ def main():
     engine = Engine(requests, demand, budget, mode=args.mode,
                     placement=args.placement, max_batch=args.max_batch,
                     replicas=args.replicas, router=args.router,
-                    backends=backends)
+                    backends=backends, topology=topology,
+                    migrate=args.migrate,
+                    ingress_gb_per_token=args.ingress_gb_per_token,
+                    budgets=budgets)
 
     axes = ", ".join(
         f"{a}={v:.3g}" + ("Gbps" if a == "net" else "GB")
@@ -186,6 +236,14 @@ def main():
           f"backend={kind}, placement={args.placement}, "
           f"replicas={args.replicas} (router={args.router}), "
           f"budget/replica [{axes}]")
+    if budgets is not None:
+        caps = " ".join(f"n{i}:{b['hbm']:.3g}GB"
+                        for i, b in enumerate(budgets))
+        print(f"heterogeneous cell [{caps}]")
+    if topology is not None:
+        print(f"topology {args.topology!r} bound "
+              f"(migrate={'on' if args.migrate else 'off'}, "
+              f"ingress {args.ingress_gb_per_token:.3g} GB/token)")
     t0 = time.time()
     summary = engine.run()
     wall = time.time() - t0
@@ -209,6 +267,26 @@ def main():
         print(f"paged KV: {waste:.1%} of resident page slots held no "
               f"live token (dense shim would hold the full "
               f"batch*max_len grid)")
+    if topology is not None:
+        print(f"network: {summary['migrations']} KV migration(s), "
+              f"{len(topology.completed())} transmission(s) completed")
+        probes = topology.net_probes()
+        if len(probes) >= 2:
+            # feed observed (GB, duration) pairs back through the
+            # estimator: the measured net curve replaces the declared
+            # per-request constant on the next estimate
+            measured = estimator.estimate(ModelTarget(
+                cfg, max_len,
+                net_gbps_per_req=args.net_gbps_per_req
+                if args.net_gbps > 0.0 else 0.0,
+                page_size=page_size, net_probes=probes))
+            info = measured.info.get("net_measured")
+            if info:
+                print(f"measured net curve from {info['n_probes']} "
+                      f"probe(s): {info['gbps_per_req']:.3g} Gbps/req "
+                      f"({info['family']}, conf="
+                      f"{measured.confidence.get('net', 0.0):.2f}) vs "
+                      f"declared {args.net_gbps_per_req:.3g}")
 
 
 if __name__ == "__main__":

@@ -6,11 +6,21 @@ the serving driver (``launch/serve.py``):
 * ``cluster``    — the event-driven :class:`ClusterRuntime` substrate:
   a virtual-clock :class:`EventLoop`, per-node booked-capacity
   :class:`Node` ledgers, :class:`ClusterState`, and the ``Router``
-  registry (``single`` / ``least-loaded`` / ``net-aware``) that routes
-  each admitted job/request to a node by its predicted multi-axis
-  demand.  BOTH the batch simulator and the serving engine run on this
-  one loop (``Simulator.run`` and single-replica ``Engine`` results are
-  golden-pinned bit-identical to the pre-runtime paths).
+  registry (``single`` / ``least-loaded`` / ``net-aware`` /
+  ``topo-aware``) that routes each admitted job/request to a node by
+  its predicted multi-axis demand.  BOTH the batch simulator and the
+  serving engine run on this one loop (``Simulator.run`` and
+  single-replica ``Engine`` results are golden-pinned bit-identical to
+  the pre-runtime paths).
+
+* ``topology``   — the network as a first-class runtime citizen:
+  :class:`Link` (fair-share bandwidth partitioning over a per-link
+  in-flight ledger), :class:`Transmission` events on the same
+  :class:`EventLoop`, :class:`Topology` presets
+  (``single-switch`` / ``two-rack`` / ``ring`` via
+  ``register_topology``), the ``topo-aware`` router (bottleneck-link
+  residual path headroom), and measured ``net_probes()`` feeding the
+  estimator registry.
 
 * ``estimator``  — :class:`DemandEstimator` registry (``moe`` /
   ``oracle`` / ``single-family`` / ``ann`` / ``conservative`` /
@@ -58,6 +68,15 @@ from repro.sched.cluster import (  # noqa: F401
     available_routers,
     get_router,
     register_router,
+)
+from repro.sched.topology import (  # noqa: F401
+    Link,
+    TopoAwareRouter,
+    Topology,
+    Transmission,
+    available_topologies,
+    get_topology,
+    register_topology,
 )
 from repro.sched.admission import (  # noqa: F401
     AdmissionController,

@@ -237,6 +237,10 @@ class Router:
     """
 
     name = "base"
+    #: routers that score on link state set this True; the runtime then
+    #: binds its Topology (if any) onto ``self.topology`` before routing
+    uses_topology = False
+    topology = None
 
     def route(self, demand: Optional[ResourceVector],
               nodes: Sequence[Node], now: float = 0.0) -> Node:
@@ -317,7 +321,13 @@ class NetAwareRouter(Router):
     """Route on the ``net`` axis first: the node with the most free
     egress/interconnect bandwidth fraction wins; the generic fit score
     breaks ties and covers clusters that do not budget ``net`` at all
-    (where this router degrades to ``least-loaded``)."""
+    (where this router degrades to ``least-loaded``).
+
+    DEPRECATED-but-pinned: this is the per-node-counter view of the
+    network — it cannot see shared links.  New topology-bound clusters
+    should use ``topo-aware`` (``repro.sched.topology``), which scores
+    by bottleneck-link residual bandwidth along the actual route; this
+    shim stays byte-identical, golden-pinned."""
 
     def route(self, demand, nodes, now=0.0):
         cands = [n for n in nodes if n.up] or list(nodes)
@@ -347,12 +357,19 @@ class ClusterRuntime:
     """
 
     def __init__(self, cluster: ClusterState,
-                 router: Union[str, Router, None] = None):
+                 router: Union[str, Router, None] = None,
+                 topology=None):
         self.loop = EventLoop()
         self.cluster = cluster
         self.router = get_router(router) if isinstance(router, str) \
             else router
         self._handlers: Dict[str, Callable[[float, object], None]] = {}
+        #: optional repro.sched.topology.Topology; when set, its
+        #: transmission events run on this loop and topology-aware
+        #: routers see it (default None keeps every schedule identical)
+        self.topology = None
+        if topology is not None:
+            self.topology = topology.attach(self)
 
     # --- clock / events ---------------------------------------------------
     @property
@@ -379,6 +396,8 @@ class ClusterRuntime:
             raise RuntimeError("this ClusterRuntime has no router — "
                                "construct it with router=<name or "
                                "Router instance>")
+        if getattr(self.router, "uses_topology", False):
+            self.router.topology = self.topology
         return self.router.route(demand, self.cluster.nodes,
                                  now=self.t if now is None else now)
 

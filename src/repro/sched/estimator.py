@@ -94,6 +94,10 @@ class ModelTarget:
     host_ram_per_req_gb: float = 0.0  # pinned host staging per request
     net_gbps_per_req: float = 0.0     # egress/interconnect per request
     page_size: int = 1                # KV allocation granularity
+    #: measured (bytes GB, duration s) pairs from completed topology
+    #: Transmissions (``Topology.net_probes()``); >= 2 points replace
+    #: the declared net_gbps_per_req constant with a fitted curve
+    net_probes: Optional[Tuple[Tuple[float, float], ...]] = None
 
 
 Target = Union[JobTarget, ModelTarget]
@@ -361,6 +365,36 @@ def calibrate_model_footprint(cfg, max_len: int, *,
     return fn
 
 
+def _measured_net_curve(net_probes) -> Tuple[Optional[float],
+                                             Optional[Dict]]:
+    """Learn the per-request net intensity from observed Transmission
+    completions: fit duration-vs-bytes over the measured ``(gb, s)``
+    probes with the SAME two-point family selection the aux axes use
+    (the affine truth — link latency intercept + inverse-bandwidth
+    slope — wins on clean data, but congested traces may genuinely
+    curve), then read off the effective GB/s one in-flight request
+    sustains at the mean observed transfer size.  Returns
+    ``(confidence, info)`` — ``(None, None)`` when the probes cannot
+    support a fit (fewer than two distinct sizes, degenerate fit)."""
+    if not net_probes:
+        return None, None
+    pts = sorted({(float(x), float(y)) for x, y in net_probes
+                  if float(x) > 0.0 and float(y) > 0.0})
+    if len(pts) < 2 or pts[0][0] >= pts[-1][0]:
+        return None, None
+    xs = np.asarray([x for x, _ in pts])
+    ys = np.asarray([y for _, y in pts])
+    fit, err = _two_point_best(xs, ys, experts.FAMILIES)
+    mean_gb = float(np.mean(xs))
+    dur = float(fit(mean_gb))
+    if dur <= 0.0:
+        return None, None
+    conf = float(np.clip(1.0 - err / _AUX_ERR_SCALE, 0.0, 1.0))
+    return conf, {"family": fit.family,
+                  "gbps_per_req": mean_gb / dur,
+                  "err": float(err), "n_probes": len(pts)}
+
+
 def _model_estimate(target: ModelTarget, *, pad: float = 1.0,
                     conservative: bool = False,
                     refit: bool = False,
@@ -387,10 +421,19 @@ def _model_estimate(target: ModelTarget, *, pad: float = 1.0,
         # requests (unpadded — an average-rate axis, not OOM-able)
         curves["net"] = MemoryFunction(
             "affine", 0.0, float(target.net_gbps_per_req))
+    net_conf, net_info = _measured_net_curve(
+        getattr(target, "net_probes", None))
+    if net_info is not None:
+        curves["net"] = MemoryFunction(
+            "affine", 0.0, net_info["gbps_per_req"])
     conf = {a: (0.0 if conservative else 1.0) for a in curves}
+    if net_conf is not None:
+        conf["net"] = net_conf        # measured, not declared
     info = {"family": "affine", "max_len": int(target.max_len),
             "pad": pad,
             "page_size": int(getattr(target, "page_size", 1))}
+    if net_info is not None:
+        info["net_measured"] = net_info
     return DemandEstimate(DemandModel(curves, primary_axis="hbm"),
                           conf, conservative, info)
 

@@ -33,10 +33,15 @@ and ``launch/serve.py`` use.
   any step, no shared position).
 * ``engine``  — :class:`Engine`: the serving loop as ``step`` events on
   the shared :class:`~repro.sched.cluster.ClusterRuntime` — 1..N
-  replica Nodes (per-replica budget + backend) with arrivals routed by
-  the ``Router`` registry (``single``/``least-loaded``/``net-aware``);
+  replica Nodes (per-replica budget + backend, heterogeneous via
+  ``budgets=``) with arrivals routed by the ``Router`` registry
+  (``single``/``least-loaded``/``net-aware``/``topo-aware``);
   ``continuous`` (default) or legacy single-replica ``wave`` mode over
-  the same budget/demand/backend.
+  the same budget/demand/backend.  With a
+  :class:`~repro.sched.topology.Topology` bound, prompts ride real
+  ingress Transmissions and preempted requests may MIGRATE their paged
+  KV to another replica (migrate-vs-recompute on modeled transfer
+  time) instead of requeueing locally.
 * ``metrics`` — :class:`ServingMetrics`: TTFT / TPOT / goodput /
   SLO-goodput (``Request.ttft_deadline``/``tpot_deadline``) /
   preemption rate / per-step binding-axis and per-node histograms.

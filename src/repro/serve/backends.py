@@ -93,6 +93,29 @@ class Backend:
     def remove(self, reqs: Sequence[Request]) -> None:
         pass
 
+    # --- KV migration (repro.sched.topology) ------------------------------
+    #: True when this backend can take over a request whose KV arrived
+    #: over the network (migration target).  Real-cache backends that
+    #: cannot materialize foreign KV leave this False — the engine then
+    #: falls back to recompute-on-join for them.
+    can_adopt: bool = False
+
+    def adopt(self, reqs: Sequence[Request], now: float) -> float:
+        """Seat requests whose KV-cache already arrived via a
+        transmission: occupy slots WITHOUT recomputing the context (the
+        transfer already paid for it in virtual time).  Returns step
+        cost in seconds (0 for model backends — no prefill runs)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} cannot adopt migrated KV "
+            f"(can_adopt={self.can_adopt})")
+
+    def recompute_cost(self, req: Request) -> Optional[float]:
+        """Modeled seconds to rebuild ``req``'s context from scratch on
+        THIS backend — the recompute side of the migrate-vs-recompute
+        decision.  ``None`` means unknown (the engine then never
+        migrates away from this backend)."""
+        return None
+
     @property
     def position(self) -> int:
         return 0
@@ -133,6 +156,18 @@ class SimBackend(Backend):
         """Cost of one decode step at occupancy ``batch`` (also used by
         wave mode, where finished requests idle in their slots)."""
         return self.t_decode_base + self.t_decode_per_seq * max(batch, 1)
+
+    # --- KV migration -----------------------------------------------------
+    # stateless cost model: adopting transferred KV is free (the
+    # Transmission already charged the virtual wire time); no token is
+    # emitted because no prefill runs — the next decode produces one
+    can_adopt = True
+
+    def adopt(self, reqs: Sequence[Request], now: float) -> float:
+        return 0.0
+
+    def recompute_cost(self, req: Request) -> float:
+        return self.t_prefill_per_token * req.prefill_len
 
 
 def _bucket(n: int) -> int:

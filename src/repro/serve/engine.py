@@ -14,7 +14,17 @@ Two modes over the same queue, demand model, budget, and backend:
   multi-axis demand vector — ``net-aware`` spreads load over the
   replicas' ``net`` headroom, which is what makes multi-replica serving
   routing over the net axis real.  Preempted requests requeue on their
-  own replica (their recomputable KV is local state).
+  own replica (their recomputable KV is local state) — unless a
+  ``topology`` is bound and ``migrate=True``, in which case eviction
+  compares the MODELED KV-transfer time (live paged footprint over the
+  bottleneck link's residual fair share) against the local recompute
+  cost and, when the wire wins, ships the KV to an adoptable replica as
+  a real :class:`~repro.sched.topology.Transmission` on the same event
+  loop; the destination seats it with ``backend.adopt`` (no prefill
+  reruns).  With ``ingress_gb_per_token > 0`` routed requests also ride
+  the fabric from the topology's ingress before they can join, so a
+  shared narrow uplink costs real TTFT.  ``topology=None`` (default)
+  keeps every schedule bit-identical to the pre-topology engine.
 * ``wave``       — the legacy ``launch/serve.py`` behaviour for
   comparison: single replica, admission once per wave via
   ``admit_batch`` against the worst-case (full-context) footprint, no
@@ -44,8 +54,9 @@ from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core.experts import MemoryFunction
 from repro.sched.admission import AdmissionController
-from repro.sched.cluster import ClusterRuntime, ClusterState, Router
+from repro.sched.cluster import ClusterRuntime, ClusterState, Node, Router
 from repro.sched.resources import DemandModel, ResourceVector
+from repro.sched.topology import Topology
 from repro.serve.backends import Backend, SimBackend
 from repro.serve.batcher import (ContinuousBatcher, ServingDemand,
                                  StepDecision)
@@ -80,7 +91,11 @@ class Engine:
                  controller: Optional[AdmissionController] = None,
                  replicas: int = 1,
                  router: Union[str, Router] = "single",
-                 backends: Optional[Sequence[Backend]] = None):
+                 backends: Optional[Sequence[Backend]] = None,
+                 topology=None,
+                 migrate: bool = False,
+                 ingress_gb_per_token: float = 0.0,
+                 budgets: Optional[Sequence[ResourceVector]] = None):
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r} (choose from {MODES})")
         if not isinstance(budget, ResourceVector):
@@ -92,6 +107,14 @@ class Engine:
             raise ValueError("wave mode is the single-replica legacy "
                              "path — use mode='continuous' with "
                              "replicas > 1")
+        if mode == "wave" and (topology is not None
+                               or budgets is not None):
+            raise ValueError("topology / heterogeneous budgets need "
+                             "mode='continuous' (wave is the legacy "
+                             "shim)")
+        if migrate and topology is None:
+            raise ValueError("migrate=True needs a topology — KV moves "
+                             "over modeled links")
         self.mode = mode
         self.demand = demand
         self.budget = budget
@@ -129,13 +152,28 @@ class Engine:
                         f"backend's max_len {max_len}")
         self.queue = RequestQueue(self.requests, placement=placement)
         # the shared substrate: one Node per replica, capacity = the
-        # per-replica budget, weights booked once on each
-        cluster = ClusterState.homogeneous(self.replicas, budget)
+        # per-replica budget (or an explicit per-replica vector when the
+        # cell is heterogeneous), weights booked once on each
+        if budgets is not None:
+            budgets = list(budgets)
+            if len(budgets) != self.replicas:
+                raise ValueError(f"got {len(budgets)} budgets for "
+                                 f"{self.replicas} replicas")
+            cluster = ClusterState(
+                [Node(i, b) for i, b in enumerate(budgets)])
+        else:
+            cluster = ClusterState.homogeneous(self.replicas, budget)
+        self.budgets = budgets
         for node in cluster:
             node.book(_WEIGHTS_KEY, ResourceVector(hbm=demand.weights_gb))
-        self.runtime = ClusterRuntime(cluster, router=router)
+        self.runtime = ClusterRuntime(cluster, router=router,
+                                      topology=topology)
+        self.topology = self.runtime.topology
+        self.migrate = bool(migrate)
+        self.ingress_gb_per_token = float(ingress_gb_per_token)
         self.batchers = [ContinuousBatcher(
-            demand, budget, controller=self.controller,
+            demand, budgets[r] if budgets is not None else budget,
+            controller=self.controller,
             placement=self.queue.placement, max_batch=self.max_batch,
             node=r) for r in range(self.replicas)]
         self.batcher = self.batchers[0]
@@ -167,6 +205,14 @@ class Engine:
         self._by_rid: Dict[int, Request] = {r.rid: r for r in
                                             self.requests}
         self._step_no = 0
+        # topology state: requests riding a Transmission toward replica
+        # d sit in _in_transit[d] (committed load, not yet joinable);
+        # rids whose KV-cache landed via migration adopt instead of
+        # recomputing on their next join
+        self._in_transit: List[List[Request]] = \
+            [[] for _ in range(self.replicas)]
+        self._kv_ready: set = set()
+        self._step_gen: List[int] = [0] * self.replicas
 
     # --- routing ----------------------------------------------------------
     def _route_released(self, now: float) -> None:
@@ -180,8 +226,38 @@ class Engine:
         for req in self.queue.drain_released(now):
             vec = self.demand.request_vector(req)
             node = self.runtime.route(vec, now=now)
-            self._pending[node.nid].append(req)
             node.book(req.rid, vec)
+            if not self._ingress_transfer(req, node.nid, now):
+                self._pending[node.nid].append(req)
+
+    def _ingress_transfer(self, req: Request, dst: int,
+                          now: float) -> bool:
+        """When a topology with an ingress is bound and prompts cost
+        bytes, a routed request rides a Transmission from the ingress
+        and only becomes pending when its last byte lands — a shared
+        narrow uplink now costs real TTFT instead of being invisible to
+        a per-node net counter."""
+        topo = self.topology
+        if (topo is None or topo.ingress is None
+                or self.ingress_gb_per_token <= 0.0):
+            return False
+        name = Topology.replica_name(dst)
+        if not topo.has_node(name):
+            return False
+        self._in_transit[dst].append(req)
+        topo.transmit(
+            topo.ingress, name,
+            req.prompt_len * self.ingress_gb_per_token, now=now,
+            tag="ingress",
+            on_complete=lambda t, tr, rid=req.rid, d=dst:
+                self._on_delivered(t, rid, d))
+        return True
+
+    def _on_delivered(self, t: float, rid: int, dst: int) -> None:
+        req = self._by_rid[rid]
+        self._in_transit[dst].remove(req)
+        self._pending[dst].append(req)
+        self._push_step(max(t, self._clocks[dst]), dst)
 
     # --- candidate filtering ---------------------------------------------
     def _candidates_for(self, ridx: int, now: float) -> List[Request]:
@@ -201,26 +277,115 @@ class Engine:
             return backend.restart_cohort(pending)
         return backend.filter_joinable(pending)
 
+    # --- KV migration (topology-bound clusters) ---------------------------
+    def _live_kv_gb(self, ridx: int, req: Request) -> float:
+        """The request's LIVE KV footprint on this backend — the paged
+        ledger's allocated pages when there is one (what would actually
+        move over the wire), the raw context length otherwise."""
+        alloc = getattr(self.backends[ridx], "alloc", None)
+        tokens = req.context_len
+        if alloc is not None:
+            try:
+                tokens = len(alloc.pages_of(req.rid)) * alloc.page_size
+            except KeyError:
+                pass
+        return self.demand.kv_gb(tokens)
+
+    def _plan_migrations(self, evicted: Sequence[Request], ridx: int,
+                         now: float) -> Dict[int, tuple]:
+        """migrate-vs-recompute: for each evicted request, pick the
+        adoptable replica with the cheapest MODELED transfer (path
+        latency + KV bytes over the bottleneck link's residual fair
+        share at current contention) and migrate iff that beats
+        rebuilding the context locally.  Sized from the live paged
+        footprint BEFORE the backend releases the pages.  Returns
+        ``rid -> (dst nid, kv GB)``."""
+        out: Dict[int, tuple] = {}
+        topo = self.topology
+        backend = self.backends[ridx]
+        src = Topology.replica_name(ridx)
+        if not topo.has_node(src):
+            return out
+        for r in evicted:
+            recompute_s = backend.recompute_cost(r)
+            if recompute_s is None:
+                continue
+            kv_gb = self._live_kv_gb(ridx, r)
+            best = None
+            for n in self.runtime.cluster:
+                if n.nid == ridx or not n.up:
+                    continue
+                if not self.backends[n.nid].can_adopt:
+                    continue
+                name = Topology.replica_name(n.nid)
+                if not topo.has_node(name):
+                    continue
+                est = topo.estimate_transfer_s(src, name, kv_gb)
+                if best is None or (est, n.nid) < best[:2]:
+                    best = (est, n.nid)
+            if best is not None and best[0] < recompute_s:
+                out[r.rid] = (best[1], kv_gb)
+        return out
+
+    def _start_migration(self, req: Request, src: int, dst: int,
+                         kv_gb: float, now: float) -> None:
+        self._in_transit[dst].append(req)
+        node = self.runtime.cluster[dst]
+        vec = self.demand.request_vector(req)
+        if req.rid in node:
+            node.rebook(req.rid, vec)
+        else:
+            node.book(req.rid, vec)   # committed load on the new home
+        self.topology.transmit(
+            Topology.replica_name(src), Topology.replica_name(dst),
+            kv_gb, now=now, tag="kv-migration",
+            on_complete=lambda t, tr, rid=req.rid, d=dst:
+                self._on_kv_arrived(t, rid, d, tr))
+
+    def _on_kv_arrived(self, t: float, rid: int, dst: int,
+                       transmission) -> None:
+        req = self._by_rid[rid]
+        self._in_transit[dst].remove(req)
+        self._kv_ready.add(rid)
+        self._pending[dst].append(req)
+        self.metrics.record_migration(transmission.duration_s)
+        self._push_step(max(t, self._clocks[dst]), dst)
+
     # --- shared step application -----------------------------------------
     def _apply(self, plan: StepDecision, ridx: int, now: float) -> float:
-        """Evict, requeue (to the same replica), join.  Returns the join
+        """Evict, requeue (same replica, or migrate the KV when the
+        wire is cheaper than recompute), join/adopt.  Returns the join
         (prefill) cost."""
         running = self._running[ridx]
         evicted = [self._by_rid[rid] for rid in plan.preempted]
         if evicted:
+            moves = self._plan_migrations(evicted, ridx, now) \
+                if (self.migrate and self.topology is not None) else {}
             self.backends[ridx].remove(evicted)
             for r in evicted:
                 r.preemptions += 1
                 running.remove(r)
                 r.state = RequestState.QUEUED
-                self._pending[ridx].append(r)
+                if r.rid in moves:
+                    dst, kv_gb = moves[r.rid]
+                    self._start_migration(r, ridx, dst, kv_gb, now)
+                else:
+                    self._pending[ridx].append(r)
         joined = [self._by_rid[rid] for rid in plan.admitted]
         dt = 0.0
         if joined:
             taken = {id(r) for r in joined}
             self._pending[ridx] = [r for r in self._pending[ridx]
                                    if id(r) not in taken]
-            dt = self.backends[ridx].join(joined, now)
+            adopted = [r for r in joined if r.rid in self._kv_ready]
+            fresh = [r for r in joined if r.rid not in self._kv_ready]
+            if adopted:
+                # KV already landed over the wire: seat without prefill
+                dt += self.backends[ridx].adopt(adopted, now)
+                for r in adopted:
+                    self._kv_ready.discard(r.rid)
+            if fresh:
+                dt += self.backends[ridx].join(fresh, now)
             for r in joined:
                 r.admissions += 1
                 r.state = RequestState.RUNNING
@@ -248,6 +413,8 @@ class Engine:
         live = {r.rid: r for r in self._running[ridx]}
         for r in self._pending[ridx]:
             live[r.rid] = r
+        for r in self._in_transit[ridx]:
+            live[r.rid] = r           # inbound KV/prompt: committed load
         for key in node.keys():
             if key != _WEIGHTS_KEY and key not in live:
                 node.release(key)
@@ -265,10 +432,30 @@ class Engine:
         return self.metrics.summary(elapsed=t)
 
     # --- continuous mode: step events on the ClusterRuntime ---------------
-    def _on_step(self, t: float, ridx: int):
-        """One decode step on replica ``ridx`` — or an idle wake that
-        consumes the next arrival.  Exactly the body of the pre-runtime
+    def _push_step(self, t: float, ridx: int) -> None:
+        """Schedule replica ``ridx``'s next step.  With no topology the
+        payload is the bare replica index — the exact legacy event
+        stream, bit-identical.  With one, transmission completions can
+        wake a replica that already has a step outstanding, so payloads
+        carry a generation and each push supersedes the previous event
+        (at most one LIVE step per replica — the same stale-event
+        discipline as the simulator's re-timed finishes)."""
+        if self.topology is None:
+            self.runtime.push(t, "step", ridx)
+        else:
+            self._step_gen[ridx] += 1
+            self.runtime.push(t, "step", (ridx, self._step_gen[ridx]))
+
+    def _on_step(self, t: float, payload):
+        """One decode step on a replica — or an idle wake that consumes
+        the next arrival.  Exactly the body of the pre-runtime
         sequential loop, dispatched per replica by the event clock."""
+        if isinstance(payload, tuple):
+            ridx, gen = payload
+            if gen != self._step_gen[ridx]:
+                return False          # superseded by a delivery wake
+        else:
+            ridx = payload
         self._route_released(t)
         running = self._running[ridx]
         cands = self._candidates_for(ridx, t)
@@ -281,7 +468,7 @@ class Engine:
                     raise RuntimeError("serving deadlock: pending "
                                        "requests but no candidates")
                 return False  # replica idle for good: chain ends
-            self.runtime.push(nxt, "step", ridx)
+            self._push_step(nxt, ridx)
             return False      # idle wake, not a planned step
         plan = self.batchers[ridx].plan_step(running, cands, t,
                                              self._step_no)
@@ -302,12 +489,12 @@ class Engine:
                 f"engine exceeded its structural step bound "
                 f"({self.max_steps}) — termination invariant broken")
         self._clocks[ridx] = t_end
-        self.runtime.push(t_end, "step", ridx)
+        self._push_step(t_end, ridx)
 
     def _run_continuous(self) -> float:
         self.runtime.on("step", self._on_step)
         for ridx in range(self.replicas):
-            self.runtime.push(0.0, "step", ridx)
+            self._push_step(0.0, ridx)
         self.runtime.run()
         return max(self._clocks)
 

@@ -56,6 +56,8 @@ class ServingMetrics:
         self._forced_admissions = 0
         self.binding_axes: Dict[str, int] = {}
         self.node_steps: Dict[int, int] = {}
+        #: completed KV-migration transfer durations (topology runs)
+        self.kv_transfer_s: List[float] = []
 
     # --- recording --------------------------------------------------------
     def record_step(self, dec: StepDecision, dt: float) -> None:
@@ -74,6 +76,12 @@ class ServingMetrics:
 
     def record_request(self, req: Request) -> None:
         self.requests.append(req)
+
+    def record_migration(self, duration_s: Optional[float]) -> None:
+        """A preempted request's KV landed on another replica after
+        riding a Transmission for ``duration_s`` virtual seconds."""
+        if duration_s is not None:
+            self.kv_transfer_s.append(float(duration_s))
 
     # --- summary ----------------------------------------------------------
     def summary(self, elapsed: Optional[float] = None) -> Dict:
@@ -117,6 +125,8 @@ class ServingMetrics:
             "mean_batch": float(np.mean(batches)) if batches else 0.0,
             "binding_axes": dict(self.binding_axes),
             "node_steps": dict(self.node_steps),
+            "migrations": len(self.kv_transfer_s),
+            "kv_transfer_p99_s": _pct(self.kv_transfer_s, 99),
         }
 
     def format_summary(self, s: Optional[Dict] = None) -> str:

@@ -251,6 +251,24 @@ class _PagedScheduler:
             self._target.pop(r.rid, None)
             self._unregister(r)
 
+    # --- KV migration -----------------------------------------------------
+    def adopt(self, reqs: Sequence[Request], now: float) -> float:
+        """Seat requests whose KV arrived over the wire: reserve pages,
+        mark the prefill already complete (progress == target), and grow
+        the live pages to the transferred context — no chunks run and no
+        token is emitted (the next decode produces one)."""
+        for r in reqs:
+            self.alloc.reserve(r.rid, self._worst_pages(r))
+            self._progress[r.rid] = r.prefill_len
+            self._target[r.rid] = r.prefill_len
+            self._slots.append(r)
+            self._register(r)
+            self.alloc.grow_to(r.rid, r.context_len)
+        return 0.0
+
+    def recompute_cost(self, req: Request) -> float:
+        return self._timer.t_prefill_per_token * req.prefill_len
+
     def _advance_chunks(self, reqs: Sequence[Request]) -> float:
         """One prefill chunk for each request; completions emit their
         first generated token.  Returns the virtual-time cost."""
@@ -297,6 +315,7 @@ class PagedSimBackend(_PagedScheduler, Backend):
     compare dense and paged schedules token-for-token."""
 
     join_stride = 1
+    can_adopt = True   # synthetic KV: a transferred cache just IS pages
 
     def __init__(self, num_pages: int, page_size: int = 16,
                  prefill_chunk: int = 32,

@@ -67,6 +67,12 @@ def main() -> None:
     ap.add_argument("--router", default=None,
                     help="router for the serving bench's multi-replica "
                          "cell (single/least-loaded/net-aware)")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome/Perfetto trace of the serving "
+                         "bench's two-rack cell to this path; the bench "
+                         "validates the trace against the trace_event "
+                         "schema and asserts the traced run's metrics "
+                         "are bit-identical to the untraced run")
     args = ap.parse_args()
     # env, not arguments: bench modules build their SimConfigs
     # themselves; the environment is read at (deferred) import time
@@ -95,6 +101,8 @@ def main() -> None:
             ap.error(f"unknown router {args.router!r} "
                      f"(available: {available_routers()})")
         os.environ["REPRO_SERVE_ROUTER"] = args.router
+    if args.trace is not None:
+        os.environ["REPRO_TRACE"] = args.trace
     todo = BENCHES if not args.bench else [
         b for b in BENCHES if any(b.startswith(p) for p in args.bench)]
     failures = []

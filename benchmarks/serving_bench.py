@@ -215,10 +215,13 @@ def _run_replicated(router: str, replicas: int):
     return summary
 
 
-def _run_topology_cell(router: str, migrate: bool):
+def _run_topology_cell(router: str, migrate: bool, tracer=None):
     """One bursty run on the asymmetric two-rack fabric.  Same trace,
     demand, budget and backends for every router — only where requests
-    land (and whether evicted KV may move) differs."""
+    land (and whether evicted KV may move) differs.  ``tracer`` (a
+    ``repro.obs.Tracer``) records the run; None must leave the summary
+    bit-identical (the --trace acceptance check relies on it).
+    Returns ``(summary, engine)``."""
     from repro.sched import get_topology
     from repro.sched.resources import ResourceVector
     from repro.serve import Engine, ServingDemand, SimBackend
@@ -240,11 +243,41 @@ def _run_topology_cell(router: str, migrate: bool):
                     budget, mode="continuous", placement="fcfs",
                     max_batch=32, replicas=TOPO_REPLICAS, router=router,
                     backends=backends, topology=topo, migrate=migrate,
-                    ingress_gb_per_token=TOPO_INGRESS_GB_PER_TOKEN)
+                    ingress_gb_per_token=TOPO_INGRESS_GB_PER_TOKEN,
+                    tracer=tracer)
     summary = engine.run()
     for dec in engine.metrics.steps:
         assert dec.booked.fits(dec.budget) or dec.forced, dec
-    return summary
+    return summary, engine
+
+
+def _traced_topology_cell(untraced: dict, trace_path: str) -> None:
+    """The --trace acceptance check: re-run the topo-aware cell with a
+    Tracer bound, assert its metrics are BIT-IDENTICAL to the untraced
+    run (tracing must be pure observation), write the schema-validated
+    trace, and prove the trace is a faithful record by reproducing the
+    bench's goodput and migration count from the trace alone."""
+    from repro.obs import Tracer, validate_chrome_trace
+    from repro.obs.report import summarize
+
+    tracer = Tracer()
+    traced, _ = _run_topology_cell("topo-aware", migrate=True,
+                                   tracer=tracer)
+    assert traced == untraced, (
+        "tracing changed the run: traced topo-cell summary is not "
+        "bit-identical to the untraced one")
+    payload = tracer.dump(trace_path)       # dump() schema-validates
+    validate_chrome_trace(payload)
+    rep = summarize(payload)
+    assert rep["goodput_tok_s"] == untraced["goodput_tok_s"], (
+        f"trace report goodput {rep['goodput_tok_s']!r} != bench "
+        f"goodput {untraced['goodput_tok_s']!r}")
+    assert rep["migrations"] == untraced["migrations"], (
+        f"trace report migrations {rep['migrations']} != bench "
+        f"{untraced['migrations']}")
+    emit("serving/topology/trace", trace_path,
+         f"{len(tracer)} events, schema-valid, metrics bit-identical "
+         f"to untraced; goodput reproduced from trace alone")
 
 
 def main() -> dict:
@@ -335,8 +368,8 @@ def main() -> dict:
         "routed": routed, "single": single, "ratio": route_ratio}
 
     # --- topology: topo-aware + KV migration vs net-aware + local requeue --
-    topo = _run_topology_cell("topo-aware", migrate=True)
-    blind = _run_topology_cell("net-aware", migrate=False)
+    topo, topo_engine = _run_topology_cell("topo-aware", migrate=True)
+    blind, _ = _run_topology_cell("net-aware", migrate=False)
     topo_ratio = topo["slo_goodput_tok_s"] \
         / max(blind["slo_goodput_tok_s"], 1e-12)
     spread = " ".join(f"n{n}:{c}" for n, c in
@@ -352,6 +385,31 @@ def main() -> dict:
     emit("serving/topology/kv_transfer_p99_ms",
          f"{topo['kv_transfer_p99_s'] * 1e3:.2f}",
          f"{topo['migrations']} migrated KV transfer(s)")
+    # per-link utilization (Link busy/bytes/peak ledgers): the narrow
+    # rack0 uplink should show the congestion the router routes around
+    for lname, st in sorted(topo["links"].items()):
+        if st["bytes_gb"] <= 0.0:
+            continue
+        emit(f"serving/topology/link/{lname}",
+             f"{st['busy_frac']:.3f}",
+             f"busy {st['busy_s']:.2f}s, {st['bytes_gb']:.3f}GB "
+             f"moved, peak {st['peak_flows']} flows")
+    rejects = " ".join(
+        f"{a}:{n}" for a, n in
+        sorted(topo["rejects_by_axis"].items())) or "-"
+    emit("serving/topology/rejected_joins",
+         str(topo["rejected_joins"]), f"by axis [{rejects}]")
+    # EventLoop telemetry: deterministic per-kind dispatch counters,
+    # wall-clock events/sec from the gauge registry (never in summary)
+    tm = topo_engine.telemetry
+    kinds = " ".join(
+        f"{k[len('events.'):]}:{int(v)}"
+        for k, v in sorted(tm.counters_with_prefix("events.").items())
+        if not k.startswith("events.stale.")
+        and k not in ("events.dispatched",))
+    emit("serving/topology/events", f"[{kinds}]",
+         f"{tm.gauges.get('events_per_s_wall', 0.0):.0f} events/s "
+         f"wall ({tm.gauges.get('wall_s', 0.0):.2f}s wall)")
     topo_payload = {
         "replicas": TOPO_REPLICAS, "uplink_gbps": list(TOPO_UPLINKS),
         "rate": TOPO_RATE, "n_requests": N_REQUESTS, "smoke": SMOKE,
@@ -361,19 +419,28 @@ def main() -> dict:
             "slo_attainment": topo["slo_attainment"],
             "preemptions": topo["preemptions"],
             "migrations": topo["migrations"],
-            "kv_transfer_p99_s": topo["kv_transfer_p99_s"]},
+            "kv_transfer_p99_s": topo["kv_transfer_p99_s"],
+            "rejected_joins": topo["rejected_joins"],
+            "rejects_by_axis": topo["rejects_by_axis"],
+            "links": topo["links"]},
         "net_aware": {
             "goodput_tok_s": blind["goodput_tok_s"],
             "slo_goodput_tok_s": blind["slo_goodput_tok_s"],
             "slo_attainment": blind["slo_attainment"],
             "preemptions": blind["preemptions"],
-            "migrations": blind["migrations"]},
+            "migrations": blind["migrations"],
+            "links": blind["links"]},
         "slo_ratio": topo_ratio}
     payload["topology"] = topo_payload
     with open(BENCH_TOPOLOGY_JSON, "w") as f:
         json.dump(topo_payload, f, indent=1, default=float)
     emit("serving/topology/pinned", BENCH_TOPOLOGY_JSON,
          "SLO goodput + migrations + p99 transfer, both routers")
+
+    # --- --trace: traced re-run of the topo cell, bit-identical check --
+    trace_path = os.environ.get("REPRO_TRACE", "")
+    if trace_path:
+        _traced_topology_cell(topo, trace_path)
     save_result("serving_bench", payload)
 
     if worst < 0.99:

@@ -89,8 +89,11 @@ fi
 # + KV migration strictly beats net-aware + local requeue on SLO goodput
 # over the asymmetric two-rack fabric, emits BENCH_topology.json), plus
 # an open_arrivals pass — which since the ClusterRuntime redesign runs
-# the simulator through the event-driven runtime shim end-to-end.  Same
-# hard wall-clock cap.
+# the simulator through the event-driven runtime shim end-to-end.  The
+# pass runs with --trace: the bench re-runs the two-rack cell traced,
+# asserts the traced metrics are bit-identical to the untraced run,
+# schema-validates the trace_event JSON, and reproduces the cell's
+# goodput + migration count from the trace alone.  Same hard wall cap.
 if [ -n "$CI_SMOKE_BENCHES" ]; then
     REMAIN_S=$(( CI_TIMEOUT_S - (SECONDS - START_S) ))
     if [ "$REMAIN_S" -lt 10 ]; then
@@ -98,16 +101,23 @@ if [ -n "$CI_SMOKE_BENCHES" ]; then
              "(${REMAIN_S}s of ${CI_TIMEOUT_S}s)" >&2
         exit 1
     fi
+    mkdir -p results
     echo "ci: running replica-routing smoke (--replicas 2 --router" \
-         "net-aware, ${REMAIN_S}s left)"
+         "net-aware --trace results/ci_trace.json, ${REMAIN_S}s left)"
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         timeout --signal=TERM --kill-after=15 "$REMAIN_S" \
         "$PYTHON" -m benchmarks.run --smoke --replicas 2 \
-        --router net-aware --bench serving_bench open_arrivals || rc=$?
+        --router net-aware --trace results/ci_trace.json \
+        --bench serving_bench open_arrivals || rc=$?
     if [ $rc -eq 124 ]; then
         echo "ci: FAILED — replica-routing smoke exceeded the remaining" \
              "${REMAIN_S}s budget" >&2
     fi
+    [ $rc -ne 0 ] && exit $rc
+    # the trace must summarize standalone too (validates schema again)
+    "$PYTHON" scripts/trace_report.py results/ci_trace.json > /dev/null \
+        || { echo "ci: FAILED — trace_report.py rejected the CI trace" >&2
+             exit 1; }
 fi
 echo "ci: wall $((SECONDS - START_S))s of ${CI_TIMEOUT_S}s cap"
 exit $rc

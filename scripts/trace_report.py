@@ -1,0 +1,42 @@
+#!/usr/bin/env python
+"""Summarize a Chrome/Perfetto trace emitted by --trace.
+
+    PYTHONPATH=src python scripts/trace_report.py out.json
+    python scripts/trace_report.py out.json --json   # machine-readable
+
+Prints the queueing / prefill / decode / transfer time breakdown,
+per-node and per-link occupancy, event rates, goodput and migration
+count — all reconstructed from the trace alone (see
+``repro.obs.report``).  Open the same file at https://ui.perfetto.dev
+for the interactive timeline.
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.obs.report import format_report, load, summarize  # noqa: E402
+from repro.obs.trace import validate_chrome_trace  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="trace_event JSON file")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary as JSON instead of text")
+    args = ap.parse_args()
+    payload = load(args.trace)
+    validate_chrome_trace(payload)
+    rep = summarize(payload)
+    if args.json:
+        json.dump(rep, sys.stdout, indent=1)
+        print()
+    else:
+        print(format_report(rep, title=args.trace))
+
+
+if __name__ == "__main__":
+    main()

@@ -224,11 +224,14 @@ class Host:
 class Simulator:
     def __init__(self, jobs_spec: Optional[List[Tuple[AppProfile, float]]],
                  policy: "Policy", cfg: SimConfig, seed: int = 0,
-                 arrivals: Optional[List] = None):
+                 arrivals: Optional[List] = None, tracer=None):
         """``jobs_spec`` is the closed batch (everything at t=0);
         ``arrivals`` (a list of ``repro.sched.arrivals.Arrival``) instead
         feeds the cluster as an open queueing system — turnaround is then
-        measured from each job's arrival time."""
+        measured from each job's arrival time.  ``tracer`` (a
+        ``repro.obs.trace.Tracer``) collects job/executor lifecycle
+        spans on the virtual clock; None (default) traces nothing and
+        keeps results bit-identical."""
         self.cfg = cfg
         self.rng = np.random.default_rng(seed)
         self.policy = policy
@@ -244,7 +247,9 @@ class Simulator:
         # registers its workload-specific handlers on it.  Simulator.run
         # is a thin shim over runtime.run — results are pinned
         # bit-identical to the pre-runtime loop by tests/test_cluster.py
-        self.runtime = ClusterRuntime(self.cluster)
+        self.runtime = ClusterRuntime(self.cluster, tracer=tracer)
+        self.tracer = self.runtime.tracer
+        self.telemetry = self.runtime.telemetry
         self.topology = None
         if cfg.topology:
             from repro.sched.topology import get_topology
@@ -355,6 +360,12 @@ class Simulator:
         job.active += 1
         host.execs.append(e)
         host.node.book(e.eid, e.claimed_vec)
+        if self.tracer is not None:
+            self.tracer.async_begin(
+                "exec", self.t, e.eid, cat="exec", process="cluster",
+                thread="execs",
+                args={"jid": job.jid, "host": host.hid,
+                      "items": items, "claimed_gb": mem_claimed})
         # OOM check: large overflow kills the executor after wasted time
         over = host.mem_true - host.mem_cap
         if over > self.cfg.oom_overflow_frac * host.mem_cap:
@@ -397,6 +408,11 @@ class Simulator:
             e.host.execs.remove(e)
             e.host.node.release(e.eid)
             e.job.active -= 1
+            if self.tracer is not None:
+                self.tracer.async_end(
+                    "exec", self.t, e.eid, cat="exec",
+                    process="cluster", thread="execs",
+                    args={"requeued": requeue_items})
         e.job.unassigned += requeue_items
         self._advance_host(e.host)
 
@@ -405,10 +421,19 @@ class Simulator:
         if job.finish is None and job.done >= job.items - tol \
                 and job.unassigned <= tol and job.active == 0:
             job.finish = t
+            if self.tracer is not None:
+                self.tracer.async_end(
+                    "job", t, job.jid, cat="job", process="cluster",
+                    thread="jobs", args={"oom_count": job.oom_count})
 
     # --- event handlers (registered on the ClusterRuntime) ------------------
     def _on_arrive(self, t: float, payload) -> None:
         job, frac = payload
+        if self.tracer is not None:
+            self.tracer.async_begin(
+                "job", t, job.jid, cat="job", process="cluster",
+                thread="jobs", args={"items": job.items,
+                                     "app": job.app.name})
         if frac is not None:
             # profiling runs while the job waits; its processed
             # items credit the job (paper: no cycle is wasted)
@@ -426,6 +451,11 @@ class Simulator:
     def _on_profiled(self, t: float, job) -> None:
         job.profiled_at = t
         job.fn_hat, job.info = self.policy.predict(job, self.rng)
+        if self.tracer is not None:
+            self.tracer.instant(
+                "profiled", t, process="cluster", thread="jobs",
+                args={"jid": job.jid,
+                      "family": getattr(job.fn_hat, "family", None)})
         self.policy.dispatch(self)
 
     def _make_exec_handler(self, kind: str):
@@ -437,6 +467,11 @@ class Simulator:
                 return False  # stale re-timed event
             self._advance_host(e.host)
             if kind == "oom" and e.items_left > 1e-9:
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "oom", t, process="cluster", thread="execs",
+                        args={"eid": e.eid, "jid": e.job.jid,
+                              "host": e.host.hid})
                 self._remove_exec(e, e.items_left)
                 # scheduler reaction (paper Section 2.3: re-run an
                 # OOM-killed executor in isolation): escalate — halve

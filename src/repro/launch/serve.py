@@ -164,6 +164,12 @@ def main():
                          "GB, e.g. '8,8,4' — a heterogeneous cell "
                          "(must list exactly --replicas values; "
                          "overrides --budget-gb per node)")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace_event JSON of "
+                         "the run to this path (virtual-clock spans: "
+                         "steps, prefill/decode, transfers, request "
+                         "lifecycles; open at https://ui.perfetto.dev "
+                         "or summarize with scripts/trace_report.py)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -219,13 +225,17 @@ def main():
     else:
         backends = [JaxBackend(cfg, max_len=max_len, seed=args.seed + r)
                     for r in range(args.replicas)]
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
     engine = Engine(requests, demand, budget, mode=args.mode,
                     placement=args.placement, max_batch=args.max_batch,
                     replicas=args.replicas, router=args.router,
                     backends=backends, topology=topology,
                     migrate=args.migrate,
                     ingress_gb_per_token=args.ingress_gb_per_token,
-                    budgets=budgets)
+                    budgets=budgets, tracer=tracer)
 
     axes = ", ".join(
         f"{a}={v:.3g}" + ("Gbps" if a == "net" else "GB")
@@ -262,6 +272,11 @@ def main():
     print(f"served {summary['completed']} requests / {tot} tokens in "
           f"{wall:.1f}s wall ({tot / max(wall, 1e-9):.1f} tok/s wall, "
           f"{summary['goodput_tok_s']:.1f} tok/s virtual)")
+    if tracer is not None:
+        tracer.dump(args.trace)
+        print(f"trace: {len(tracer)} events -> {args.trace} "
+              f"(summarize: python scripts/trace_report.py "
+              f"{args.trace})")
     if args.backend == "paged":
         waste = np.mean([be.waste_ratio() for be in backends])
         print(f"paged KV: {waste:.1%} of resident page slots held no "

@@ -133,8 +133,25 @@ class AdmissionController:
             raise ValueError(f"unknown shading {shading!r} "
                              f"(choose from 'per-axis', 'scalar')")
         merged = {"estimate": est, **(info or {})}
-        return self.admit(est.model, budget, cap=cap, floor=floor,
-                          book=book, info=merged)
+        dec = self.admit(est.model, budget, cap=cap, floor=floor,
+                         book=book, info=merged)
+        # decision provenance: every admit_target decision records what
+        # the inverse actually saw — raw free capacity, the shaded
+        # budget, the per-axis confidence that shaded it, and the
+        # binding axis.  info is the frozen dataclass's one mutable
+        # field, so post-hoc enrichment is the supported idiom.
+        dec.info["provenance"] = {
+            "free": dict(free.items())
+            if isinstance(free, ResourceVector) else float(free),
+            "budget": dict(budget.items())
+            if isinstance(budget, ResourceVector) else float(budget),
+            "confidence": dict(est.confidence),
+            "conservative": bool(est.conservative),
+            "binding_axis": dec.binding_axis,
+        }
+        if "reject" in dec.info:
+            dec.info["reject"]["confidence"] = dict(est.confidence)
+        return dec
 
     # --- calibration (deprecated shim) -----------------------------------
     def calibrate(self, family: str,
@@ -256,8 +273,25 @@ class AdmissionController:
         if units < raw:
             binding = None                     # the cap bound first
         if units <= 0.0 or units < floor - 1e-12:
+            # structured reject reason: which axis bound, how short the
+            # budget falls of the smallest useful grant, so callers /
+            # metrics never see a silent zero-unit decision
+            info_d = dict(info or {})
+            floor_u = max(float(floor), 1.0)
+            need = dm.demand(floor_u)
+            deficit = {a: float(v - bv[a]) for a, v in need.items()
+                       if a in bv and v > bv[a] + 1e-12}
+            axis = binding
+            if axis is None and deficit:
+                axis = max(deficit, key=deficit.get)
+            info_d["reject"] = {
+                "axis": axis,
+                "units": units,
+                "floor": float(floor),
+                "deficit": deficit,
+            }
             return AdmissionDecision(0.0, 0.0, budget_gb, dm.primary_fn,
-                                     dict(info or {}), binding, None, bv)
+                                     info_d, binding, None, bv)
         if book:
             booked = self._book_vector(dm, units, bv)
             mem = booked.get(primary, 0.0)

@@ -45,9 +45,11 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import time
 from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple, Type, Union)
 
+from repro.obs.telemetry import Telemetry
 from repro.sched.resources import ResourceVector
 
 _EPS = 1e-12
@@ -358,12 +360,22 @@ class ClusterRuntime:
 
     def __init__(self, cluster: ClusterState,
                  router: Union[str, Router, None] = None,
-                 topology=None):
+                 topology=None, tracer=None,
+                 telemetry: Optional[Telemetry] = None):
         self.loop = EventLoop()
         self.cluster = cluster
         self.router = get_router(router) if isinstance(router, str) \
             else router
         self._handlers: Dict[str, Callable[[float, object], None]] = {}
+        #: optional repro.obs.trace.Tracer — None (the default) means
+        #: no trace is collected and dispatch pays only a None check,
+        #: so untraced runs stay bit-identical to the pre-obs runtime
+        self.tracer = tracer
+        #: always-on counter/gauge registry: deterministic per-kind
+        #: event counts live in counters, wall-clock rates ONLY in
+        #: gauges (never surfaced in seed-pinned summaries)
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry()
         #: optional repro.sched.topology.Topology; when set, its
         #: transmission events run on this loop and topology-aware
         #: routers see it (default None keeps every schedule identical)
@@ -409,7 +421,18 @@ class ClusterRuntime:
         lands past ``max_time`` (the clock does NOT advance to it —
         legacy horizon semantics), or ``until()`` returns True after an
         event.  ``tick(t)`` runs after every dispatched event (trace
-        collection).  Returns the final clock."""
+        collection).  Returns the final clock.
+
+        Every dispatched event counts into ``telemetry.counters``
+        (``events.<kind>``, ``events.stale.<kind>``) and, with a tracer
+        bound, emits one zero-duration slice per event kind on the
+        ``runtime`` track — the span-per-event-kind view of the loop.
+        Wall-clock throughput (events/sec of REAL time) lands only in
+        ``telemetry.gauges`` so it can never leak into seed-pinned
+        summaries."""
+        tracer, tm = self.tracer, self.telemetry
+        dispatched = 0
+        wall0 = time.perf_counter()
         while self.loop:
             t, _, kind, payload = self.loop.pop()
             if t > max_time:
@@ -420,10 +443,24 @@ class ClusterRuntime:
             except KeyError:
                 raise KeyError(f"no handler registered for event kind "
                                f"{kind!r}") from None
+            tm.inc(f"events.{kind}")
+            dispatched += 1
             if handler(t, payload) is False:
+                tm.inc(f"events.stale.{kind}")
+                if tracer is not None:
+                    tracer.instant(f"stale:{kind}", t,
+                                   process="runtime", thread=kind)
                 continue                       # stale event (see on())
+            if tracer is not None:
+                tracer.complete(f"event:{kind}", t, t,
+                                process="runtime", thread=kind)
             if tick is not None:
                 tick(t)
             if until is not None and until():
                 break
+        wall = time.perf_counter() - wall0
+        tm.inc("events.dispatched", dispatched)
+        tm.set_gauge("wall_s", tm.gauges.get("wall_s", 0.0) + wall)
+        if wall > 0.0:
+            tm.set_gauge("events_per_s_wall", dispatched / wall)
         return self.loop.t

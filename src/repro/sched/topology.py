@@ -64,7 +64,8 @@ class Link:
     in-flight transmissions in its ledger, plus a fixed propagation
     latency charged once per transfer before any byte moves."""
 
-    __slots__ = ("name", "src", "dst", "gbps", "latency_s", "flows")
+    __slots__ = ("name", "src", "dst", "gbps", "latency_s", "flows",
+                 "busy_s", "bytes_gb", "peak_flows", "_busy_since")
 
     def __init__(self, src: str, dst: str, gbps: float,
                  latency_s: float = 0.0, name: Optional[str] = None):
@@ -79,10 +80,35 @@ class Link:
         self.name = name or f"{self.src}->{self.dst}"
         #: tid -> in-flight Transmission (the per-link ledger)
         self.flows: Dict[int, "Transmission"] = {}
+        #: virtual seconds with >= 1 flow in the ledger (closed
+        #: intervals; in-progress busy is added by ``Topology.link_stats``)
+        self.busy_s = 0.0
+        #: GB actually moved over this link (credited as flows advance)
+        self.bytes_gb = 0.0
+        #: highest concurrent-flow count ever seen
+        self.peak_flows = 0
+        self._busy_since: Optional[float] = None
 
     @property
     def n_flows(self) -> int:
         return len(self.flows)
+
+    def add_flow(self, tr: "Transmission", now: float) -> None:
+        """Ledger insert + busy/peak bookkeeping (0 -> 1 flows opens a
+        busy interval)."""
+        if not self.flows:
+            self._busy_since = now
+        self.flows[tr.tid] = tr
+        if len(self.flows) > self.peak_flows:
+            self.peak_flows = len(self.flows)
+
+    def drop_flow(self, tid: int, now: float) -> None:
+        """Ledger remove; the last flow leaving closes the busy
+        interval into ``busy_s``."""
+        if self.flows.pop(tid, None) is not None and not self.flows \
+                and self._busy_since is not None:
+            self.busy_s += max(now - self._busy_since, 0.0)
+            self._busy_since = None
 
     def fair_share(self) -> float:
         """GB/s each CURRENT flow gets (full bandwidth when idle)."""
@@ -307,9 +333,10 @@ class Topology:
         if tr is None:
             return False                      # cancelled before start
         for link in tr.path:
-            link.flows[tr.tid] = tr
+            link.add_flow(tr, t)
         tr.t_last = t
         self._repartition(t)
+        self._trace_links(t, tr.path)
 
     def _on_done(self, t: float, payload):
         tid, gen = payload
@@ -335,7 +362,12 @@ class Topology:
         for tr in self._started():
             dt = now - tr.t_last
             if dt > 0.0:
-                tr.done_gb = min(tr.gb, tr.done_gb + tr.rate * dt)
+                moved = min(tr.gb, tr.done_gb + tr.rate * dt) \
+                    - tr.done_gb
+                tr.done_gb += moved
+                if moved > 0.0:
+                    for link in tr.path:
+                        link.bytes_gb += moved
             tr.t_last = now
 
     def _retime(self, now: float) -> None:
@@ -354,14 +386,53 @@ class Topology:
 
     def _finalize(self, tr: Transmission, t: float) -> None:
         for link in tr.path:
-            link.flows.pop(tr.tid, None)
+            link.drop_flow(tr.tid, t)
         del self._active[tr.tid]
         tr.finish_t = t
         tr.done_gb = tr.gb
         self._log.append(tr)
         self._repartition(t)                  # survivors speed up
+        tracer = getattr(self._runtime, "tracer", None)
+        if tracer is not None:
+            tag = tr.tag or "net"
+            tracer.complete(f"xfer:{tag}", tr.start_t, t,
+                            process="network", thread=tag,
+                            cat="network",
+                            args={"gb": tr.gb, "src": tr.src,
+                                  "dst": tr.dst, "tid": tr.tid,
+                                  "t0": tr.start_t, "t1": t})
+        self._trace_links(t, tr.path)
         if tr.on_complete is not None:
             tr.on_complete(t, tr)
+
+    def _trace_links(self, t: float, path: Sequence[Link]) -> None:
+        """Counter-track samples of the affected links' flow counts —
+        the report integrates these into per-link busy fractions."""
+        tracer = getattr(self._runtime, "tracer", None)
+        if tracer is None:
+            return
+        for link in path:
+            tracer.counter(f"link:{link.name}", t,
+                           {"flows": link.n_flows}, process="network")
+
+    def link_stats(self, now: Optional[float] = None,
+                   elapsed: Optional[float] = None) -> Dict[str, Dict]:
+        """Per-link utilization ledger: busy virtual seconds (including
+        any interval still open at ``now``), busy fraction of
+        ``elapsed``, GB moved, and peak concurrent flows."""
+        out: Dict[str, Dict] = {}
+        for link in self.links():
+            busy = link.busy_s
+            if link._busy_since is not None and now is not None:
+                busy += max(float(now) - link._busy_since, 0.0)
+            out[link.name] = {
+                "busy_s": busy,
+                "busy_frac": busy / elapsed
+                if elapsed is not None and elapsed > 0.0 else 0.0,
+                "bytes_gb": link.bytes_gb,
+                "peak_flows": link.peak_flows,
+            }
+        return out
 
     # --- measured probes ---------------------------------------------------
     def completed(self, tag: Optional[str] = None) -> List[Transmission]:

@@ -200,6 +200,13 @@ class StepDecision:
     #: saying which requests were forced)
     forced_rids: Tuple[int, ...] = ()
     node: int = 0                   # replica Node the step ran on
+    #: candidates that wanted to join this step but were declined —
+    #: with the axis that bound the join inverse and how far short the
+    #: headroom fell of admitting ONE more (the structured reject
+    #: reason; 0 / None / 0.0 when everything offered was admitted)
+    rejected: int = 0
+    reject_axis: Optional[str] = None
+    reject_deficit: float = 0.0
 
     @property
     def over_budget(self) -> bool:
@@ -270,6 +277,9 @@ class ContinuousBatcher:
         # 2. join new prefills under the post-eviction headroom
         admitted: List[int] = []
         binding: Optional[str] = None
+        rejected = 0
+        reject_axis: Optional[str] = None
+        reject_deficit = 0.0
         slots = self.max_batch - len(running)
         # running and pending are disjoint by contract (a victim is only
         # requeued AFTER the plan is applied), so a just-evicted request
@@ -280,9 +290,9 @@ class ContinuousBatcher:
         if cands and not forced:
             headroom = self.budget.headroom(
                 self.demand.booked(running, 1))
+            jd = self._join_demand(cands)
             dec = self.controller.admit(
-                self._join_demand(cands), headroom,
-                cap=float(len(cands)), book=False)
+                jd, headroom, cap=float(len(cands)), book=False)
             n = int(np.floor(dec.units + 1e-9))
             binding = dec.binding_axis
             admitted = [r.rid for r in cands[:n]]
@@ -296,6 +306,23 @@ class ContinuousBatcher:
                 forced = True
                 forced_axes = self._violated(running, 2)
                 forced_rids = (first.rid,)
+            rejected = max(len(cands) - len(admitted), 0)
+            if rejected:
+                # reject reason: axis and deficit of admitting ONE more
+                # candidate than actually joined, against the headroom
+                # the inverse saw
+                need = jd.demand(float(len(admitted) + 1))
+                overs = {a: float(v - headroom[a])
+                         for a, v in need.items()
+                         if a in headroom and v > headroom[a] + _EPS}
+                reject_axis = dec.binding_axis or (
+                    max(overs, key=overs.get) if overs else None)
+                reject_deficit = overs.get(reject_axis, 0.0)
+        elif cands:
+            # the eviction floor forced the step: every offered
+            # candidate was declined without running the join inverse
+            rejected = len(cands)
+            reject_axis = forced_axes[0] if forced_axes else None
 
         # end-of-step footprint: incumbents grow one token; joiners gain
         # two (the prefill-emitted token plus the decode-step token)
@@ -309,7 +336,9 @@ class ContinuousBatcher:
             preempted=tuple(preempted), batch=len(running),
             booked=booked, budget=self.budget, binding_axis=binding,
             forced=forced, forced_axes=forced_axes,
-            forced_rids=forced_rids, node=self.node)
+            forced_rids=forced_rids, node=self.node,
+            rejected=rejected, reject_axis=reject_axis,
+            reject_deficit=reject_deficit)
 
     # --- helpers ----------------------------------------------------------
     def _join_demand(self, cands: Sequence[Request]) -> DemandModel:

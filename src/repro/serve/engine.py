@@ -53,6 +53,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core.experts import MemoryFunction
+from repro.obs.telemetry import sample_node
 from repro.sched.admission import AdmissionController
 from repro.sched.cluster import ClusterRuntime, ClusterState, Node, Router
 from repro.sched.resources import DemandModel, ResourceVector
@@ -95,7 +96,8 @@ class Engine:
                  topology=None,
                  migrate: bool = False,
                  ingress_gb_per_token: float = 0.0,
-                 budgets: Optional[Sequence[ResourceVector]] = None):
+                 budgets: Optional[Sequence[ResourceVector]] = None,
+                 tracer=None):
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r} (choose from {MODES})")
         if not isinstance(budget, ResourceVector):
@@ -167,7 +169,11 @@ class Engine:
         for node in cluster:
             node.book(_WEIGHTS_KEY, ResourceVector(hbm=demand.weights_gb))
         self.runtime = ClusterRuntime(cluster, router=router,
-                                      topology=topology)
+                                      topology=topology, tracer=tracer)
+        #: None by default — every span/instant below is gated on it,
+        #: so untraced runs stay bit-identical to the pre-obs engine
+        self.tracer = self.runtime.tracer
+        self.telemetry = self.runtime.telemetry
         self.topology = self.runtime.topology
         self.migrate = bool(migrate)
         self.ingress_gb_per_token = float(ingress_gb_per_token)
@@ -227,6 +233,11 @@ class Engine:
             vec = self.demand.request_vector(req)
             node = self.runtime.route(vec, now=now)
             node.book(req.rid, vec)
+            if self.tracer is not None:
+                self.tracer.async_begin(
+                    "req", now, req.rid, cat="request",
+                    process="requests", thread="lifecycle",
+                    args={"node": node.nid, "prompt": req.prompt_len})
             if not self._ingress_transfer(req, node.nid, now):
                 self._pending[node.nid].append(req)
 
@@ -389,6 +400,10 @@ class Engine:
             for r in joined:
                 r.admissions += 1
                 r.state = RequestState.RUNNING
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "join", now, process=f"replica{ridx}",
+                        thread="events", args={"rid": r.rid})
             running.extend(joined)
         return dt
 
@@ -401,6 +416,18 @@ class Engine:
                 r.state = RequestState.FINISHED
                 r.finish_t = now
                 running.remove(r)
+                self._trace_req_end(r, now)
+
+    def _trace_req_end(self, r: Request, now: float) -> None:
+        """Close the request's async lifecycle span.  ``t1`` carries the
+        raw virtual seconds so the trace report can recompute goodput
+        (tokens / elapsed) bit-identically — the µs timestamp alone
+        loses float precision on the round-trip."""
+        if self.tracer is not None:
+            self.tracer.async_end(
+                "req", now, r.rid, cat="request", process="requests",
+                thread="lifecycle",
+                args={"tokens": r.tokens_decoded, "t1": now})
 
     def _sync_node(self, ridx: int) -> None:
         """Reconcile the replica Node's claim ledger with its committed
@@ -429,6 +456,9 @@ class Engine:
     def run(self) -> Dict:
         t = self._run_continuous() if self.mode == "continuous" \
             else self._run_wave()
+        if self.topology is not None:
+            self.metrics.record_link_stats(
+                self.topology.link_stats(now=t, elapsed=t))
         return self.metrics.summary(elapsed=t)
 
     # --- continuous mode: step events on the ClusterRuntime ---------------
@@ -472,8 +502,9 @@ class Engine:
             return False      # idle wake, not a planned step
         plan = self.batchers[ridx].plan_step(running, cands, t,
                                              self._step_no)
-        dt = self._apply(plan, ridx, t)
-        dt += self.backends[ridx].decode(running)
+        dt_join = self._apply(plan, ridx, t)
+        dt_decode = self.backends[ridx].decode(running)
+        dt = dt_join + dt_decode
         t_end = t + dt
         self._step_no += 1
         for r in running:
@@ -484,12 +515,50 @@ class Engine:
         self._retire(ridx, t_end)
         self._sync_node(ridx)
         self.metrics.record_step(plan, dt)
+        if self.tracer is not None:
+            self._trace_step(plan, ridx, t, t_end, dt_join)
         if self._step_no > self.max_steps:
             raise RuntimeError(
                 f"engine exceeded its structural step bound "
                 f"({self.max_steps}) — termination invariant broken")
         self._clocks[ridx] = t_end
         self._push_step(t_end, ridx)
+
+    def _trace_step(self, plan: StepDecision, ridx: int, t: float,
+                    t_end: float, dt_join: float) -> None:
+        """One 'step' span per planned step on the replica's track,
+        split into prefill/decode sub-phases, with preempt/forced
+        instants and per-axis node utilization counter samples.  The
+        span args carry raw virtual seconds ('t0'/'t1') so the report's
+        busy-time integral is float-exact, not a µs round-trip."""
+        proc = f"replica{ridx}"
+        tr = self.tracer
+        tr.complete("step", t, t_end, process=proc, thread="steps",
+                    cat="serving",
+                    args={"step": plan.step, "batch": plan.batch,
+                          "admitted": len(plan.admitted),
+                          "preempted": len(plan.preempted),
+                          "binding": plan.binding_axis,
+                          "t0": t, "t1": t_end})
+        if dt_join > 0.0:
+            tr.complete("prefill", t, t + dt_join, process=proc,
+                        thread="phases", cat="serving",
+                        args={"t0": t, "t1": t + dt_join})
+        if t_end > t + dt_join:
+            tr.complete("decode", t + dt_join, t_end, process=proc,
+                        thread="phases", cat="serving",
+                        args={"t0": t + dt_join, "t1": t_end})
+        for rid in plan.preempted:
+            tr.instant("preempt", t, process=proc, thread="events",
+                       args={"rid": rid})
+        if plan.forced:
+            tr.instant("forced", t, process=proc, thread="events",
+                       args={"rids": list(plan.forced_rids)})
+        node = self.runtime.cluster[ridx]
+        tr.counter(f"node{ridx}:util", t_end,
+                   {axis: node.utilization(axis)
+                    for axis in node.capacity.axes}, process=proc)
+        sample_node(self.telemetry, node, t_end)
 
     def _run_continuous(self) -> float:
         self.runtime.on("step", self._on_step)
@@ -571,6 +640,7 @@ class Engine:
                 r.state = RequestState.FINISHED
                 r.finish_t = t
                 self._running[0].remove(r)
+                self._trace_req_end(r, t)
             self.backend.remove(wave_live)
             self._sync_node(0)
         return t

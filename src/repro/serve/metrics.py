@@ -58,6 +58,12 @@ class ServingMetrics:
         self.node_steps: Dict[int, int] = {}
         #: completed KV-migration transfer durations (topology runs)
         self.kv_transfer_s: List[float] = []
+        #: join candidates declined, histogrammed by the axis that
+        #: bound the join inverse ("cap" when no axis was recorded)
+        self.rejects_by_axis: Dict[str, int] = {}
+        self._rejected_joins = 0
+        #: per-link utilization (topology runs; see Topology.link_stats)
+        self.link_stats: Dict[str, Dict] = {}
 
     # --- recording --------------------------------------------------------
     def record_step(self, dec: StepDecision, dt: float) -> None:
@@ -72,6 +78,12 @@ class ServingMetrics:
         if dec.binding_axis is not None and dec.admitted:
             self.binding_axes[dec.binding_axis] = \
                 self.binding_axes.get(dec.binding_axis, 0) + 1
+        rejected = getattr(dec, "rejected", 0)
+        if rejected:
+            self._rejected_joins += rejected
+            axis = getattr(dec, "reject_axis", None) or "cap"
+            self.rejects_by_axis[axis] = \
+                self.rejects_by_axis.get(axis, 0) + rejected
         self.node_steps[dec.node] = self.node_steps.get(dec.node, 0) + 1
 
     def record_request(self, req: Request) -> None:
@@ -82,6 +94,11 @@ class ServingMetrics:
         riding a Transmission for ``duration_s`` virtual seconds."""
         if duration_s is not None:
             self.kv_transfer_s.append(float(duration_s))
+
+    def record_link_stats(self, stats: Dict[str, Dict]) -> None:
+        """Attach the topology's end-of-run per-link ledger (busy
+        seconds/fraction, GB moved, peak concurrent flows)."""
+        self.link_stats = {name: dict(st) for name, st in stats.items()}
 
     # --- summary ----------------------------------------------------------
     def summary(self, elapsed: Optional[float] = None) -> Dict:
@@ -127,6 +144,12 @@ class ServingMetrics:
             "node_steps": dict(self.node_steps),
             "migrations": len(self.kv_transfer_s),
             "kv_transfer_p99_s": _pct(self.kv_transfer_s, 99),
+            # structured join-reject accounting (satellite of the obs
+            # PR): deterministic, so goldens may pin these too
+            "rejected_joins": self._rejected_joins,
+            "rejects_by_axis": dict(self.rejects_by_axis),
+            "links": {name: dict(st)
+                      for name, st in self.link_stats.items()},
         }
 
     def format_summary(self, s: Optional[Dict] = None) -> str:

@@ -16,7 +16,9 @@
 ``python -m benchmarks.run --smoke --replicas 2 --router net-aware --bench serving_bench``
     size the serving bench's multi-replica routing cell
     (repro.sched.cluster Router registry: single / least-loaded /
-    net-aware)
+    net-aware / drf — drf is the weighted-DRF fairness router from
+    repro.sched.tenancy; the serving bench's noisy-neighbor tenancy
+    cell always runs drf internally regardless of --router)
 
 Prints ``name,value,derived`` CSV rows; per-bench JSON lands in results/.
 """
@@ -66,7 +68,7 @@ def main() -> None:
                          "multi-replica routing cell")
     ap.add_argument("--router", default=None,
                     help="router for the serving bench's multi-replica "
-                         "cell (single/least-loaded/net-aware)")
+                         "cell (single/least-loaded/net-aware/drf)")
     ap.add_argument("--trace", default=None,
                     help="write a Chrome/Perfetto trace of the serving "
                          "bench's two-rack cell to this path; the bench "

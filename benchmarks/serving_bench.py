@@ -31,6 +31,17 @@ Nodes and compares the selected router against the ``single`` routing
 baseline — routed goodput must beat single-node goodput, which is the
 acceptance bar for multi-replica routing being real.
 
+The tenancy cell is the noisy-neighbor acceptance bar for the
+``repro.sched.tenancy`` fairness subsystem: two compliant tenants at
+their fair arrival rate plus one flooding at 4x it, on a contended
+2-replica cell.  Weighted-DRF routing + per-node knapsack joins
+(``Engine(tenants=...)``, ``router="drf"``) must keep every compliant
+tenant's SLO goodput within 10% of its isolated run (attainment
+>= 0.9) while aggregate goodput stays >= 0.95x the untenanted
+least-loaded baseline.  Numbers land in ``BENCH_tenancy.json`` at the
+repo root (per-tenant SLO goodput drf vs isolated vs untenanted,
+rejects by requeue-vs-new origin, end-of-run credit scores).
+
 The topology cell binds a ``repro.sched.topology`` two-rack fabric
 with one NARROW rack uplink and streams a bursty trace whose prompt
 payloads ride real ingress Transmissions: ``topo-aware`` routing
@@ -88,6 +99,26 @@ ROUTER = os.environ.get("REPRO_SERVE_ROUTER", "net-aware")
 NET_GBPS_PER_REQ = 0.1
 NET_BUDGET_GBPS = 0.25          # per replica: ~2 concurrent requests
 
+# --- the multi-tenant fairness cell (repro.sched.tenancy) ------------------
+# the noisy-neighbor scenario: two compliant tenants at their fair
+# arrival rate plus one flooding at TEN_NOISY_MULT x it, on a contended
+# cell.  Weighted-DRF routing + knapsack joins must keep every
+# compliant tenant's SLO goodput within 10% of its ISOLATED run (the
+# same requests alone on the same cluster) while aggregate goodput
+# stays >= 0.95x the untenanted least-loaded baseline ("best-fit":
+# fairness must not buy its protection with throughput)
+TEN_COMPLIANT = ("gold", "silver")
+TEN_NOISY = "flood"
+TEN_RATE_PER_S = 10.0           # each compliant tenant's arrival rate
+TEN_NOISY_MULT = 4.0            # the noisy neighbor's rate multiple
+TEN_N = 8 if SMOKE else 24      # requests per compliant tenant
+TEN_REPLICAS = 2
+TEN_KV_MULT = 4.0               # tight HBM: joins actually compete
+TEN_MAX_BATCH = 16
+BENCH_TENANCY_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_tenancy.json")
+
 # --- the network-topology cell (repro.sched.topology) ----------------------
 # a 2-rack cell with one NARROW rack uplink: prompt payloads ride real
 # ingress Transmissions, so a topology-blind router that lands half the
@@ -109,7 +140,7 @@ BENCH_TOPOLOGY_JSON = os.path.join(
 
 
 def _requests(n: int, rate: float, seed: int,
-              ttft: float = TTFT_SLO_S):
+              ttft: float = TTFT_SLO_S, tenant: str | None = None):
     from repro.serve import Request
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, size=n)
@@ -121,7 +152,8 @@ def _requests(n: int, rate: float, seed: int,
                                                     MAX_NEW + 1)),
                     arrival=float(t[i]),
                     ttft_deadline=ttft,
-                    tpot_deadline=TPOT_SLO_S)
+                    tpot_deadline=TPOT_SLO_S,
+                    tenant=tenant)
             for i in range(n)]
 
 
@@ -209,6 +241,58 @@ def _run_replicated(router: str, replicas: int):
     engine = Engine(_requests(N_REQUESTS, 40.0, SEED + 1), demand,
                     budget, mode="continuous", placement="fcfs",
                     max_batch=32, replicas=replicas, router=router)
+    summary = engine.run()
+    for dec in engine.metrics.steps:
+        assert dec.booked.fits(dec.budget) or dec.forced, dec
+    return summary
+
+
+def _tenant_population(seed: int, only: str | None = None):
+    """The noisy-neighbor request population: one Poisson stream per
+    tenant (compliant tenants at TEN_RATE_PER_S, the noisy one at
+    TEN_NOISY_MULT x it), merged by arrival and re-rid'd.  ``only``
+    keeps a single tenant's requests at their ORIGINAL arrival times —
+    the isolated-run population.  Requests are mutable lifecycle
+    records, so every run gets a fresh (deterministic) build."""
+    from repro.serve import Request
+
+    streams = []
+    for i, name in enumerate(TEN_COMPLIANT):
+        streams.append(_requests(TEN_N, TEN_RATE_PER_S, seed + i,
+                                 tenant=name))
+    streams.append(_requests(int(TEN_N * TEN_NOISY_MULT),
+                             TEN_RATE_PER_S * TEN_NOISY_MULT,
+                             seed + len(TEN_COMPLIANT),
+                             tenant=TEN_NOISY))
+    merged = sorted((r for s in streams for r in s),
+                    key=lambda r: (r.arrival, r.tenant))
+    if only is not None:
+        merged = [r for r in merged if r.tenant == only]
+    return [Request(rid=i, prompt_len=r.prompt_len,
+                    max_new_tokens=r.max_new_tokens, arrival=r.arrival,
+                    ttft_deadline=r.ttft_deadline,
+                    tpot_deadline=r.tpot_deadline, tenant=r.tenant)
+            for i, r in enumerate(merged)]
+
+
+def _run_tenancy(requests, router: str, registry=None):
+    """One run of the noisy-neighbor population on the contended
+    tenancy cell: same replicas / demand / budget for every variant —
+    only the router and whether a TenantRegistry is bound differ."""
+    from repro.sched.resources import ResourceVector
+    from repro.serve import Engine, ServingDemand
+
+    full_ctx = PROMPT_LEN + MAX_NEW
+    demand = ServingDemand(
+        weights_gb=WEIGHTS_GB, kv_gb_per_token=KV_GB_PER_TOKEN,
+        host_ram_per_req_gb=HOST_RAM_PER_REQ_GB)
+    budget = ResourceVector(
+        hbm=WEIGHTS_GB + KV_GB_PER_TOKEN * full_ctx * TEN_KV_MULT,
+        host_ram=HOST_RAM_PER_REQ_GB * 2.0 * TEN_KV_MULT)
+    engine = Engine(requests, demand, budget, mode="continuous",
+                    placement="fcfs", max_batch=TEN_MAX_BATCH,
+                    replicas=TEN_REPLICAS, router=router,
+                    tenants=registry)
     summary = engine.run()
     for dec in engine.metrics.steps:
         assert dec.booked.fits(dec.budget) or dec.forced, dec
@@ -367,6 +451,69 @@ def main() -> dict:
         "replicas": REPLICAS, "router": ROUTER,
         "routed": routed, "single": single, "ratio": route_ratio}
 
+    # --- multi-tenant fairness: the noisy-neighbor cell -------------------
+    from repro.sched import Tenant, TenantRegistry
+    registry = TenantRegistry(
+        [Tenant(n) for n in TEN_COMPLIANT] + [Tenant(TEN_NOISY)])
+    drf = _run_tenancy(_tenant_population(SEED + 3), "drf",
+                       registry=registry)
+    bestfit = _run_tenancy(_tenant_population(SEED + 3), "least-loaded")
+    isolated = {name: _run_tenancy(_tenant_population(SEED + 3,
+                                                      only=name),
+                                   "least-loaded")
+                for name in TEN_COMPLIANT}
+    ten_ratio = drf["goodput_tok_s"] \
+        / max(bestfit["goodput_tok_s"], 1e-12)
+    for name in TEN_COMPLIANT:
+        td = drf["tenants"][name]
+        iso = isolated[name]
+        # token-denominated: per-tenant tok/s rates divide by the
+        # whole shared-run window, so tokens are the comparable unit
+        frac = td["slo_good_tokens"] \
+            / max(iso["slo_good_tokens"], 1e-12)
+        emit(f"serving/tenancy/{name}/slo_good_tokens",
+             f"{td['slo_good_tokens']}",
+             f"isolated {iso['slo_good_tokens']} "
+             f"({frac:.3f}x), attainment {td['slo_attainment']:.2f}, "
+             f"credit {registry.credit(name):.2f}")
+    noisy = drf["tenants"][TEN_NOISY]
+    emit(f"serving/tenancy/{TEN_NOISY}/slo_goodput",
+         f"{noisy['slo_goodput_tok_s']:.1f}",
+         f"the {TEN_NOISY_MULT:.0f}x noisy neighbor: attainment "
+         f"{noisy['slo_attainment']:.2f}, {noisy['rejects']} rejects, "
+         f"credit {registry.credit(TEN_NOISY):.2f}")
+    emit("serving/tenancy/goodput_ratio", f"{ten_ratio:.3f}",
+         "drf+knapsack / untenanted least-loaded, aggregate")
+    origins = " ".join(f"{o}:{n}" for o, n in
+                       sorted(drf["rejects_by_origin"].items())) or "-"
+    emit("serving/tenancy/rejects_by_origin", f"[{origins}]",
+         "knapsack skips, requeue-vs-new")
+    ten_payload = {
+        "tenants": list(TEN_COMPLIANT) + [TEN_NOISY],
+        "noisy": TEN_NOISY, "noisy_mult": TEN_NOISY_MULT,
+        "rate_per_tenant": TEN_RATE_PER_S, "n_per_tenant": TEN_N,
+        "replicas": TEN_REPLICAS, "kv_mult": TEN_KV_MULT,
+        "smoke": SMOKE,
+        "drf": {"goodput_tok_s": drf["goodput_tok_s"],
+                "slo_goodput_tok_s": drf["slo_goodput_tok_s"],
+                "rejects_by_origin": drf["rejects_by_origin"],
+                "tenants": drf["tenants"],
+                "credits": {n: registry.credit(n)
+                            for n in registry.names()}},
+        "bestfit": {"goodput_tok_s": bestfit["goodput_tok_s"],
+                    "slo_goodput_tok_s": bestfit["slo_goodput_tok_s"],
+                    "tenants": bestfit["tenants"]},
+        "isolated": {n: {"goodput_tok_s": s["goodput_tok_s"],
+                         "slo_goodput_tok_s": s["slo_goodput_tok_s"],
+                         "slo_attainment": s["slo_attainment"]}
+                     for n, s in isolated.items()},
+        "goodput_ratio": ten_ratio}
+    payload["tenancy"] = ten_payload
+    with open(BENCH_TENANCY_JSON, "w") as f:
+        json.dump(ten_payload, f, indent=1, default=float)
+    emit("serving/tenancy/pinned", BENCH_TENANCY_JSON,
+         "per-tenant SLO goodput drf vs isolated vs untenanted")
+
     # --- topology: topo-aware + KV migration vs net-aware + local requeue --
     topo, topo_engine = _run_topology_cell("topo-aware", migrate=True)
     blind, _ = _run_topology_cell("net-aware", migrate=False)
@@ -469,6 +616,29 @@ def main() -> dict:
                 f"kv_mult={c['kv_mult']}: "
                 f"{c['paged']['goodput_tok_s']:.1f} vs dense "
                 f"{c['dense']['goodput_tok_s']:.1f} tok/s")
+    # the tenancy acceptance bar: with one tenant flooding at
+    # TEN_NOISY_MULT x its fair rate, weighted-DRF + knapsack joins
+    # must hold every compliant tenant's SLO goodput within 10% of its
+    # isolated run AND its attainment >= 0.9, without giving up more
+    # than 5% aggregate goodput vs the untenanted best-fit baseline
+    for name in TEN_COMPLIANT:
+        td = drf["tenants"][name]
+        iso = isolated[name]
+        if td["slo_good_tokens"] < iso["slo_good_tokens"] * 0.9:
+            raise AssertionError(
+                f"compliant tenant {name!r} lost SLO goodput to the "
+                f"noisy neighbor under drf+knapsack: "
+                f"{td['slo_good_tokens']} SLO-good tokens vs isolated "
+                f"{iso['slo_good_tokens']}")
+        if td["slo_attainment"] < 0.9:
+            raise AssertionError(
+                f"compliant tenant {name!r} SLO attainment "
+                f"{td['slo_attainment']:.2f} < 0.9 under drf+knapsack")
+    if ten_ratio < 0.95:
+        raise AssertionError(
+            f"tenancy fairness cost too much aggregate goodput: "
+            f"drf+knapsack at {ten_ratio:.3f}x the untenanted "
+            f"least-loaded baseline (floor 0.95)")
     # the topology acceptance bar: on the contended 2-rack fabric,
     # path-headroom routing + KV migration must STRICTLY beat the
     # topology-blind router with local requeue on SLO goodput, and

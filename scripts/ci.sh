@@ -9,7 +9,11 @@
 # replica-routing pass runs the continuous-vs-wave serving sweep
 # (asserts continuous >= wave goodput AND routed > single-node goodput
 # with 2 replicas net-aware) plus open_arrivals through the
-# ClusterRuntime shim — all inside the SAME wall-clock cap.
+# ClusterRuntime shim; finally a noisy-neighbor tenancy pass re-runs
+# the serving bench under --router drf (asserts compliant tenants keep
+# >= 0.9 SLO attainment within 10% of their isolated SLO-good tokens
+# while aggregate goodput stays within 5% of the untenanted baseline)
+# — all inside the SAME wall-clock cap.
 #
 #   scripts/ci.sh            # fast selection + smoke, <= $CI_TIMEOUT_S (120)
 #   CI_FULL=1 scripts/ci.sh  # full suite incl. @slow tier-2 (longer cap)
@@ -118,6 +122,35 @@ if [ -n "$CI_SMOKE_BENCHES" ]; then
     "$PYTHON" scripts/trace_report.py results/ci_trace.json > /dev/null \
         || { echo "ci: FAILED — trace_report.py rejected the CI trace" >&2
              exit 1; }
+fi
+
+# Multi-tenant fairness smoke (repro.sched.tenancy): the serving bench's
+# noisy-neighbor cell with the drf router — one tenant floods at 4x its
+# fair rate and the bench asserts every compliant (high-credit) tenant
+# keeps >= 0.9 SLO attainment with SLO-good tokens within 10% of its
+# isolated run, while aggregate goodput stays within 5% of the
+# untenanted least-loaded baseline (emits BENCH_tenancy.json).  Running
+# the whole bench under --router drf also proves the drf router
+# UNTENANTED degrades to least-loaded (the route_ratio > 1 assertion in
+# the net-contended cell).  Same hard wall cap.
+if [ -n "$CI_SMOKE_BENCHES" ]; then
+    REMAIN_S=$(( CI_TIMEOUT_S - (SECONDS - START_S) ))
+    if [ "$REMAIN_S" -lt 10 ]; then
+        echo "ci: FAILED — no budget left for the tenancy smoke" \
+             "(${REMAIN_S}s of ${CI_TIMEOUT_S}s)" >&2
+        exit 1
+    fi
+    echo "ci: running noisy-neighbor tenancy smoke (--replicas 2" \
+         "--router drf, ${REMAIN_S}s left)"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        timeout --signal=TERM --kill-after=15 "$REMAIN_S" \
+        "$PYTHON" -m benchmarks.run --smoke --replicas 2 \
+        --router drf --bench serving_bench || rc=$?
+    if [ $rc -eq 124 ]; then
+        echo "ci: FAILED — the tenancy smoke exceeded the remaining" \
+             "${REMAIN_S}s budget" >&2
+    fi
+    [ $rc -ne 0 ] && exit $rc
 fi
 echo "ci: wall $((SECONDS - START_S))s of ${CI_TIMEOUT_S}s cap"
 exit $rc

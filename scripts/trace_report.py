@@ -6,9 +6,10 @@
 
 Prints the queueing / prefill / decode / transfer time breakdown,
 per-node and per-link occupancy, event rates, goodput and migration
-count — all reconstructed from the trace alone (see
-``repro.obs.report``).  Open the same file at https://ui.perfetto.dev
-for the interactive timeline.
+count — plus per-tenant goodput when the run carried tenants (the
+engine tags request lifecycle spans with their tenant) — all
+reconstructed from the trace alone (see ``repro.obs.report``).  Open
+the same file at https://ui.perfetto.dev for the interactive timeline.
 """
 import argparse
 import json

@@ -162,6 +162,7 @@ class Job:
     conservative: bool = False
     active: int = 0                   # running executors (O(1) finish check)
     oom_count: int = 0
+    tenant: Optional[str] = None      # owning tenant (fairness accounting)
 
 
 @dataclass
@@ -269,7 +270,8 @@ class Simulator:
             for jid, a in enumerate(sorted(arrivals, key=lambda a: a.t)):
                 c_iso = a.items / (cfg.n_hosts * a.app.rate)
                 self.jobs.append(Job(jid, a.app, a.items, c_iso,
-                                     unassigned=a.items, arrival=a.t))
+                                     unassigned=a.items, arrival=a.t,
+                                     tenant=getattr(a, "tenant", None)))
         else:
             for jid, (app, items) in enumerate(jobs_spec):
                 c_iso = items / (cfg.n_hosts * app.rate)
@@ -422,18 +424,23 @@ class Simulator:
                 and job.unassigned <= tol and job.active == 0:
             job.finish = t
             if self.tracer is not None:
+                end_args = {"oom_count": job.oom_count}
+                if job.tenant is not None:
+                    end_args["tenant"] = job.tenant
                 self.tracer.async_end(
                     "job", t, job.jid, cat="job", process="cluster",
-                    thread="jobs", args={"oom_count": job.oom_count})
+                    thread="jobs", args=end_args)
 
     # --- event handlers (registered on the ClusterRuntime) ------------------
     def _on_arrive(self, t: float, payload) -> None:
         job, frac = payload
         if self.tracer is not None:
+            span_args = {"items": job.items, "app": job.app.name}
+            if job.tenant is not None:
+                span_args["tenant"] = job.tenant
             self.tracer.async_begin(
                 "job", t, job.jid, cat="job", process="cluster",
-                thread="jobs", args={"items": job.items,
-                                     "app": job.app.name})
+                thread="jobs", args=span_args)
         if frac is not None:
             # profiling runs while the job waits; its processed
             # items credit the job (paper: no cycle is wasted)

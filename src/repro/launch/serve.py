@@ -46,6 +46,14 @@ registry entry (``single`` / ``least-loaded`` / ``net-aware`` /
 ``topo-aware``; the deprecated net-aware router spreads load over the
 replicas' ``net``-axis headroom when ``--net-gbps`` budgets it).
 
+``--tenants gold:2,bronze:1`` runs multi-tenant fairness
+(``repro.sched.tenancy``): requests cycle over the named tenants,
+admission/eviction run the credit-scored weighted-DRF knapsack, and
+``--router drf`` routes each request to the node where its tenant's
+weighted dominant share stays lowest; a per-tenant summary table
+(credit, goodput, SLO attainment, dominant share, rejects) prints at
+exit.
+
 ``--topology two-rack`` binds a ``repro.sched.topology`` preset: prompt
 payloads ride real ingress :class:`Transmission` events
 (``--ingress-gb-per-token``), the ``topo-aware`` router scores
@@ -65,7 +73,8 @@ import time
 import numpy as np
 
 from repro.configs import get_config
-from repro.sched import (ModelTarget, ResourceVector, available_placements,
+from repro.sched import (ModelTarget, ResourceVector, Tenant,
+                         TenantRegistry, available_placements,
                          available_routers, available_topologies,
                          get_estimator, get_topology)
 from repro.serve import (Engine, JaxBackend, PagedJaxBackend, Request,
@@ -76,11 +85,14 @@ from repro.serve import (Engine, JaxBackend, PagedJaxBackend, Request,
 SERVE_ESTIMATORS = ("kv-growth", "conservative")
 
 
-def build_requests(args, rng: np.random.Generator):
+def build_requests(args, rng: np.random.Generator, tenants=None):
     """Heterogeneous prompt/decode lengths make step-level membership
     churn real: short requests retire early (continuous mode backfills
-    their slots), long prompts dominate padding (sjf shrinks it)."""
+    their slots), long prompts dominate padding (sjf shrinks it).
+    With ``--tenants``, requests cycle round-robin over the tenant
+    names so every tenant sees the same workload mix."""
     reqs = []
+    names = [t.name for t in tenants] if tenants else None
     for i in range(args.requests):
         plen = int(rng.integers(max(args.prompt_len // 2, 1),
                                 args.prompt_len + 1))
@@ -88,8 +100,24 @@ def build_requests(args, rng: np.random.Generator):
                                args.decode_steps + 1))
         arrival = float(i) / args.rate if args.rate > 0 else 0.0
         reqs.append(Request(rid=i, prompt_len=plen, max_new_tokens=new,
-                            arrival=arrival))
+                            arrival=arrival,
+                            tenant=names[i % len(names)]
+                            if names else None))
     return reqs
+
+
+def parse_tenants(spec: str):
+    """``name:weight,name:weight,...`` (weight optional, default 1.0)
+    into a Tenant list for the registry."""
+    tenants = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, weight = part.partition(":")
+        tenants.append(Tenant(name=name.strip(),
+                              weight=float(weight) if weight else 1.0))
+    return tenants
 
 
 def main():
@@ -164,6 +192,15 @@ def main():
                          "GB, e.g. '8,8,4' — a heterogeneous cell "
                          "(must list exactly --replicas values; "
                          "overrides --budget-gb per node)")
+    ap.add_argument("--tenants", default="",
+                    help="comma-separated 'name:weight' tenant specs "
+                         "(weight optional, default 1.0), e.g. "
+                         "'gold:2,bronze:1' — requests cycle over the "
+                         "tenants round-robin, the engine runs "
+                         "credit-scored weighted-DRF fairness (pair "
+                         "with --router drf), and a per-tenant summary "
+                         "table prints at exit; '' = untenanted "
+                         "(bit-identical legacy schedules)")
     ap.add_argument("--trace", default="",
                     help="write a Chrome/Perfetto trace_event JSON of "
                          "the run to this path (virtual-clock spans: "
@@ -211,8 +248,16 @@ def main():
     elif args.migrate:
         ap.error("--migrate needs --topology")
 
+    tenancy = None
+    tenant_list = None
+    if args.tenants:
+        tenant_list = parse_tenants(args.tenants)
+        if not tenant_list:
+            ap.error("--tenants given but no tenant specs parsed")
+        tenancy = TenantRegistry(tenant_list)
+
     rng = np.random.default_rng(args.seed)
-    requests = build_requests(args, rng)
+    requests = build_requests(args, rng, tenants=tenant_list)
     if args.backend == "paged":
         # pool sized so max_batch worst-case requests can reserve, +1
         # for the scratch page
@@ -235,7 +280,7 @@ def main():
                     backends=backends, topology=topology,
                     migrate=args.migrate,
                     ingress_gb_per_token=args.ingress_gb_per_token,
-                    budgets=budgets, tracer=tracer)
+                    budgets=budgets, tracer=tracer, tenants=tenancy)
 
     axes = ", ".join(
         f"{a}={v:.3g}" + ("Gbps" if a == "net" else "GB")
@@ -254,6 +299,10 @@ def main():
         print(f"topology {args.topology!r} bound "
               f"(migrate={'on' if args.migrate else 'off'}, "
               f"ingress {args.ingress_gb_per_token:.3g} GB/token)")
+    if tenancy is not None:
+        specs = " ".join(f"{t.name}:{t.weight:g}" for t in tenant_list)
+        print(f"tenancy [{specs}] (credit-scored weighted-DRF; "
+              f"router={args.router!r})")
     t0 = time.time()
     summary = engine.run()
     wall = time.time() - t0
@@ -272,6 +321,19 @@ def main():
     print(f"served {summary['completed']} requests / {tot} tokens in "
           f"{wall:.1f}s wall ({tot / max(wall, 1e-9):.1f} tok/s wall, "
           f"{summary['goodput_tok_s']:.1f} tok/s virtual)")
+    if tenancy is not None and summary["tenants"]:
+        print(f"{'tenant':<12} {'weight':>6} {'credit':>6} "
+              f"{'done':>6} {'goodput':>9} {'slo':>6} "
+              f"{'share':>7} {'rejects':>8}")
+        for name, st in summary["tenants"].items():
+            t = tenancy.get(name)
+            rej = sum(st["rejects"].values())
+            print(f"{name:<12} {t.weight:>6g} "
+                  f"{tenancy.credit(name):>6.2f} "
+                  f"{st['completed']:>3}/{st['requests']:<3}"
+                  f"{st['goodput_tok_s']:>8.1f} "
+                  f"{st['slo_attainment']:>6.2f} "
+                  f"{st['dominant_share_mean']:>7.3f} {rej:>8}")
     if tracer is not None:
         tracer.dump(args.trace)
         print(f"trace: {len(tracer)} events -> {args.trace} "

@@ -13,7 +13,9 @@ simulator / topology hooks) and reconstructs:
 * **event rates** — runtime events dispatched per kind (and stale
   drops) per virtual second;
 * **goodput and migrations** — finished requests' token sum over
-  elapsed time, and completed KV-migration transfers.  These reproduce
+  elapsed time, and completed KV-migration transfers — plus the same
+  goodput broken down **per tenant** from the tenant tag on request
+  lifecycle spans (tenancy runs).  These reproduce
   the serving bench's numbers from the trace alone (`benchmarks/
   serving_bench.py` asserts bit-equality), which is the acceptance bar
   for the trace being a faithful record rather than a pretty picture.
@@ -69,6 +71,10 @@ def summarize(trace) -> Dict:
     good_tokens = 0
     completed = 0
     migrations = 0
+    # per-tenant goodput, rebuilt from the tenant tag the engine stamps
+    # on request lifecycle spans (absent on untenanted runs)
+    tenant_tokens: Dict[str, int] = {}
+    tenant_completed: Dict[str, int] = {}
     link_samples: Dict[str, List[Tuple[float, float]]] = {}
 
     for ev in events:
@@ -109,6 +115,11 @@ def summarize(trace) -> Dict:
             args = ev.get("args") or {}
             good_tokens += int(args.get("tokens", 0))
             completed += 1
+            if "tenant" in args:
+                tn = str(args["tenant"])
+                tenant_tokens[tn] = tenant_tokens.get(tn, 0) \
+                    + int(args.get("tokens", 0))
+                tenant_completed[tn] = tenant_completed.get(tn, 0) + 1
             if "t1" in args:
                 t1 = float(args["t1"])
                 elapsed_exact = t1 if elapsed_exact is None \
@@ -168,6 +179,14 @@ def summarize(trace) -> Dict:
         # bench reproduces its goodput bit-identically from the trace
         "goodput_tok_s": good_tokens / max(elapsed, 1e-12),
         "migrations": migrations,
+        # per-tenant breakdown, same goodput formula per tenant ({} on
+        # untenanted traces)
+        "tenants": {
+            tn: {"completed": tenant_completed.get(tn, 0),
+                 "good_tokens": tenant_tokens.get(tn, 0),
+                 "goodput_tok_s": tenant_tokens.get(tn, 0)
+                 / max(elapsed, 1e-12)}
+            for tn in sorted(tenant_tokens)},
     }
 
 
@@ -191,6 +210,9 @@ def format_report(rep: Dict, title: Optional[str] = None) -> str:
     for lname, st in rep["per_link"].items():
         lines.append(f"link {lname}: busy {st['busy_frac']:.1%}, peak "
                      f"{st['peak_flows']} flows")
+    for tn, st in rep.get("tenants", {}).items():
+        lines.append(f"tenant {tn}: {st['completed']} completed, "
+                     f"goodput {st['goodput_tok_s']:.1f} tok/s")
     kinds = " ".join(f"{k}:{n}" for k, n in
                      sorted(rep["events_by_kind"].items()))
     stale = sum(rep["stale_by_kind"].values())

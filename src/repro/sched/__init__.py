@@ -1,6 +1,6 @@
 """Online scheduling subsystem: the paper's runtime, factored out.
 
-Seven parts, shared by the cluster simulator (``core/simulator.py``) and
+Eight parts, shared by the cluster simulator (``core/simulator.py``) and
 the serving driver (``launch/serve.py``):
 
 * ``cluster``    — the event-driven :class:`ClusterRuntime` substrate:
@@ -48,6 +48,12 @@ the serving driver (``launch/serve.py``):
   trace-driven arrival streams with per-class input-size mixes over an
   application universe, so the system runs as a continuously-fed queue
   rather than a batch at t=0.
+* ``tenancy``    — multi-tenant fairness: :class:`Tenant` /
+  :class:`TenantRegistry` (credit scores from live SLO / latency /
+  reject signals, a per-(tenant, node) usage ledger), the ``drf``
+  weighted-DRF router (dominant share over credit-coupled weight), and
+  the per-node knapsack packer (:func:`pack_step`) the continuous
+  batcher runs instead of greedy FIFO when a registry is bound.
 * ``online``     — :class:`OnlineRefresher`: folds newly profiled
   arrivals back into a fitted :class:`~repro.core.predictor.MoEPredictor`
   (KNN append + scaler-bound widening) without a refit.
@@ -105,5 +111,12 @@ from repro.sched.arrivals import (  # noqa: F401
     load_trace_jsonl,
     poisson_arrivals,
     trace_arrivals,
+)
+from repro.sched.tenancy import (  # noqa: F401
+    Tenant,
+    TenantRegistry,
+    WeightedDRFRouter,
+    pack_step,
+    request_origin,
 )
 from repro.sched.online import OnlineRefresher  # noqa: F401

@@ -289,6 +289,11 @@ class AdmissionController:
                 "units": units,
                 "floor": float(floor),
                 "deficit": deficit,
+                # requeue-vs-new provenance: callers that re-offer
+                # preempted work pass info={"origin": "requeue"} so
+                # per-tenant reject accounting doesn't double-count
+                # preemption churn as fresh demand mis-prediction
+                "origin": info_d.get("origin", "new"),
             }
             return AdmissionDecision(0.0, 0.0, budget_gb, dm.primary_fn,
                                      info_d, binding, None, bv)

@@ -34,6 +34,7 @@ class Arrival:
     t: float              # arrival time (s)
     app: AppProfile
     items: float          # input size in M-items
+    tenant: Optional[str] = None  # owning tenant (fairness accounting)
 
 
 @dataclass
@@ -60,11 +61,14 @@ def sample_input_size(rng: np.random.Generator,
 
 
 def poisson_arrivals(apps: Sequence[AppProfile], acfg: ArrivalConfig,
-                     seed: Union[int, Sequence[int]] = 0) -> List[Arrival]:
+                     seed: Union[int, Sequence[int]] = 0,
+                     tenant: Optional[str] = None) -> List[Arrival]:
     """Open Poisson stream: exponential inter-arrival gaps at
     ``rate_per_s``, app drawn from ``app_weights`` (uniform by default),
     size from the per-class mix. ``seed`` takes anything
-    ``np.random.default_rng`` accepts (ints or int sequences)."""
+    ``np.random.default_rng`` accepts (ints or int sequences).
+    ``tenant`` stamps every arrival with an owning tenant (merge
+    per-tenant streams with ``sorted(a + b, key=lambda x: x.t)``)."""
     if acfg.rate_per_s <= 0:
         raise ValueError("rate_per_s must be positive")
     rng = np.random.default_rng(seed)
@@ -82,22 +86,27 @@ def poisson_arrivals(apps: Sequence[AppProfile], acfg: ArrivalConfig,
             break
         app = apps[int(rng.choice(len(apps), p=p))]
         out.append(Arrival(t, app, sample_input_size(rng,
-                                                     acfg.size_weights)))
+                                                     acfg.size_weights),
+                           tenant=tenant))
     return out
 
 
-def trace_arrivals(trace: Sequence[Tuple[float, str, Union[str, float]]],
+def trace_arrivals(trace: Sequence[Tuple],
                    apps: Sequence[AppProfile]) -> List[Arrival]:
     """Replay ``(t, app_name, size)`` rows; ``size`` is either a class
-    name from the paper's Table 4 or an explicit M-items value."""
+    name from the paper's Table 4 or an explicit M-items value.  Rows
+    may carry a fourth element, the owning tenant name (or None)."""
     by_name = {a.name: a for a in apps}
     out: List[Arrival] = []
-    for t, name, size in trace:
+    for row in trace:
+        t, name, size = row[0], row[1], row[2]
+        tenant = row[3] if len(row) > 3 else None
         if name not in by_name:
             raise KeyError(f"unknown application {name!r}")
         items = INPUT_SIZES_M_ITEMS[size] if isinstance(size, str) \
             else float(size)
-        out.append(Arrival(float(t), by_name[name], float(items)))
+        out.append(Arrival(float(t), by_name[name], float(items),
+                           tenant=None if tenant is None else str(tenant)))
     return sorted(out, key=lambda a: a.t)
 
 
@@ -107,13 +116,14 @@ def load_trace_jsonl(path: str,
     the entry point for real-cluster-log replay.
 
     Each non-blank line is an object with ``t`` (arrival seconds),
-    ``app`` (a name in ``apps``), and either ``items`` (explicit M-items)
-    or ``size`` (a Table-4 class name: small/medium/large).  Rows may be
-    out of order in the file; the stream comes back time-sorted, via the
-    same validation as :func:`trace_arrivals`."""
+    ``app`` (a name in ``apps``), either ``items`` (explicit M-items)
+    or ``size`` (a Table-4 class name: small/medium/large), and an
+    optional ``tenant`` (owning tenant name for fairness accounting).
+    Rows may be out of order in the file; the stream comes back
+    time-sorted, via the same validation as :func:`trace_arrivals`."""
     import json
 
-    rows: List[Tuple[float, str, Union[str, float]]] = []
+    rows: List[Tuple] = []
     with open(path) as f:
         for ln, line in enumerate(f, 1):
             line = line.strip()
@@ -137,5 +147,7 @@ def load_trace_jsonl(path: str,
             else:
                 raise ValueError(
                     f"{path}:{ln}: trace rows need 'items' or 'size'")
-            rows.append((float(rec["t"]), str(rec["app"]), size))
+            tenant = rec.get("tenant")
+            rows.append((float(rec["t"]), str(rec["app"]), size,
+                         None if tenant is None else str(tenant)))
     return trace_arrivals(rows, apps)

@@ -243,6 +243,13 @@ class Router:
     #: binds its Topology (if any) onto ``self.topology`` before routing
     uses_topology = False
     topology = None
+    #: routers that score per-tenant fair shares set this True; the
+    #: runtime then binds its TenantRegistry (if any) onto
+    #: ``self.tenancy`` and the requesting tenant onto ``self.tenant``
+    #: before routing (see repro.sched.tenancy)
+    uses_tenancy = False
+    tenancy = None
+    tenant = None
 
     def route(self, demand: Optional[ResourceVector],
               nodes: Sequence[Node], now: float = 0.0) -> Node:
@@ -361,7 +368,8 @@ class ClusterRuntime:
     def __init__(self, cluster: ClusterState,
                  router: Union[str, Router, None] = None,
                  topology=None, tracer=None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 tenancy=None):
         self.loop = EventLoop()
         self.cluster = cluster
         self.router = get_router(router) if isinstance(router, str) \
@@ -382,6 +390,11 @@ class ClusterRuntime:
         self.topology = None
         if topology is not None:
             self.topology = topology.attach(self)
+        #: optional repro.sched.tenancy.TenantRegistry; tenancy-aware
+        #: routers (``uses_tenancy``) see it at route time, exactly the
+        #: late-binding pattern topology uses (default None keeps every
+        #: schedule identical — drf degrades to least-loaded)
+        self.tenancy = tenancy
 
     # --- clock / events ---------------------------------------------------
     @property
@@ -403,13 +416,17 @@ class ClusterRuntime:
 
     # --- routing ----------------------------------------------------------
     def route(self, demand: Optional[ResourceVector] = None,
-              now: Optional[float] = None) -> Node:
+              now: Optional[float] = None,
+              tenant: Optional[str] = None) -> Node:
         if self.router is None:
             raise RuntimeError("this ClusterRuntime has no router — "
                                "construct it with router=<name or "
                                "Router instance>")
         if getattr(self.router, "uses_topology", False):
             self.router.topology = self.topology
+        if getattr(self.router, "uses_tenancy", False):
+            self.router.tenancy = self.tenancy
+            self.router.tenant = tenant
         return self.router.route(demand, self.cluster.nodes,
                                  now=self.t if now is None else now)
 

@@ -80,6 +80,8 @@ class JobTarget:
     app: "AppProfile"
     units: float                      # total work (M-items / k-tokens)
     primary_axis: str = "host_ram"
+    #: owning tenant for fairness accounting (None = untenanted)
+    tenant: Optional[str] = None
 
 
 @dataclass(frozen=True)

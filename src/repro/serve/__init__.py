@@ -44,7 +44,13 @@ and ``launch/serve.py`` use.
   time) instead of requeueing locally.
 * ``metrics`` — :class:`ServingMetrics`: TTFT / TPOT / goodput /
   SLO-goodput (``Request.ttft_deadline``/``tpot_deadline``) /
-  preemption rate / per-step binding-axis and per-node histograms.
+  preemption rate / per-step binding-axis and per-node histograms,
+  plus per-tenant goodput / SLO-attainment / dominant-share when the
+  engine runs with a :class:`~repro.sched.tenancy.TenantRegistry`
+  (``Engine(tenants=...)`` turns on weighted-DRF routing via
+  ``router="drf"``, knapsack joins in the batcher, and credit-scored
+  fairness; ``tenants=None`` stays bit-identical to the untenanted
+  engine).
 """
 from repro.serve.request import Request, RequestState  # noqa: F401
 from repro.serve.queue import (  # noqa: F401

@@ -38,6 +38,8 @@ from repro.core.experts import MemoryFunction
 from repro.sched.admission import AdmissionController
 from repro.sched.placement import PlacementPolicy, get_placement
 from repro.sched.resources import DemandModel, ResourceVector
+from repro.sched.tenancy import (TenantRegistry, pack_step,
+                                 request_origin)
 from repro.serve.request import Request
 
 _EPS = 1e-9
@@ -207,6 +209,13 @@ class StepDecision:
     rejected: int = 0
     reject_axis: Optional[str] = None
     reject_deficit: float = 0.0
+    #: declined candidates by rid, and the requeue-vs-new origin split
+    #: (a declined candidate that has run before is preemption churn,
+    #: not fresh demand — per-tenant reject accounting needs the two
+    #: apart; ``rejected == rejected_new + rejected_requeue``)
+    rejected_rids: Tuple[int, ...] = ()
+    rejected_new: int = 0
+    rejected_requeue: int = 0
 
     @property
     def over_budget(self) -> bool:
@@ -232,7 +241,8 @@ class ContinuousBatcher:
     def __init__(self, demand: ServingDemand, budget: ResourceVector,
                  controller: Optional[AdmissionController] = None,
                  placement: Union[str, PlacementPolicy] = "fcfs",
-                 max_batch: int = 64, node: int = 0):
+                 max_batch: int = 64, node: int = 0,
+                 tenancy: Optional[TenantRegistry] = None):
         if "hbm" not in budget:
             raise ValueError("serving budget must carry the hbm axis")
         if budget["hbm"] <= 0:
@@ -244,6 +254,12 @@ class ContinuousBatcher:
             if isinstance(placement, str) else placement
         self.max_batch = int(max_batch)
         self.node = int(node)       # replica id stamped on decisions
+        #: with a TenantRegistry bound, joins run the weighted-DRF
+        #: knapsack (sched.tenancy.pack_step) and evictions pick the
+        #: highest-weighted-share tenant's lowest-priority request;
+        #: None (the default) keeps the legacy FIFO-prefix plan
+        #: bit-identical
+        self.tenancy = tenancy
 
     # --- planning ---------------------------------------------------------
     def plan_step(self, running: Sequence[Request],
@@ -259,7 +275,12 @@ class ContinuousBatcher:
         forced_axes: Tuple[str, ...] = ()
         forced_rids: Tuple[int, ...] = ()
 
-        # 1. next step's KV growth: evict lowest-priority until it fits
+        # 1. next step's KV growth: evict until it fits.  Untenanted:
+        # lowest-priority first (reverse placement order).  With a
+        # registry bound, the highest-weighted-share tenant pays first
+        # and placement picks WHICH of its requests (its lowest
+        # priority) — recomputed per eviction, since shares shift as
+        # usage shrinks.
         victims = list(reversed(self.placement.order_jobs(running,
                                                           now=now)))
         while running and not self.demand.booked(running, 1).fits(
@@ -270,7 +291,8 @@ class ContinuousBatcher:
                 forced_axes = self._violated(running, 1)
                 forced_rids = (running[0].rid,)
                 break
-            v = victims.pop(0)
+            v = victims.pop(0) if self.tenancy is None \
+                else self._drf_victim(running, now)
             running.remove(v)
             preempted.append(v.rid)
 
@@ -280,14 +302,55 @@ class ContinuousBatcher:
         rejected = 0
         reject_axis: Optional[str] = None
         reject_deficit = 0.0
+        rejected_rids: Tuple[int, ...] = ()
+        rejected_new = 0
+        rejected_requeue = 0
         slots = self.max_batch - len(running)
         # running and pending are disjoint by contract (a victim is only
         # requeued AFTER the plan is applied), so a just-evicted request
         # can never be re-admitted within the same plan
         assert not preempted or \
             not {r.rid for r in pending} & set(preempted)
-        cands = list(pending)[:slots] if slots > 0 else []
-        if cands and not forced:
+        # the knapsack sees the WHOLE pending set (it may skip an
+        # oversized head and admit smaller work behind it); the legacy
+        # prefix inverse only ever looks at the first ``slots``
+        if self.tenancy is not None and slots > 0:
+            cands = list(pending)
+        else:
+            cands = list(pending)[:slots] if slots > 0 else []
+        if cands and not forced and self.tenancy is not None:
+            headroom = self.budget.headroom(
+                self.demand.booked(running, 1))
+            usage = self._tenant_usage(running)
+            picked, skips = pack_step(
+                self.tenancy, cands, headroom, self.budget, usage,
+                self._join_vector, slots)
+            if not picked and not running and pending:
+                # nothing runs and nothing fits: forced single admission
+                # of the first candidate the DRF order offered (the
+                # lowest-share tenant's head), same progress floor as
+                # the legacy path
+                frid = skips[0].rid if skips else cands[0].rid
+                first = next(r for r in cands if r.rid == frid)
+                picked = [first]
+                skips = [s for s in skips if s.rid != frid]
+                forced = True
+                forced_axes = self._violated([first], 2)
+                forced_rids = (first.rid,)
+            admitted = [r.rid for r in picked]
+            running.extend(picked)
+            rejected = len(skips)
+            if skips:
+                top = max(
+                    (s for s in skips if s.axis is not None),
+                    key=lambda s: s.deficit, default=None)
+                reject_axis = top.axis if top else None
+                reject_deficit = top.deficit if top else 0.0
+                rejected_rids = tuple(s.rid for s in skips)
+                rejected_new = sum(1 for s in skips
+                                   if s.origin == "new")
+                rejected_requeue = rejected - rejected_new
+        elif cands and not forced:
             headroom = self.budget.headroom(
                 self.demand.booked(running, 1))
             jd = self._join_demand(cands)
@@ -318,11 +381,20 @@ class ContinuousBatcher:
                 reject_axis = dec.binding_axis or (
                     max(overs, key=overs.get) if overs else None)
                 reject_deficit = overs.get(reject_axis, 0.0)
+                declined = cands[len(admitted):]
+                rejected_rids = tuple(r.rid for r in declined)
+                rejected_new = sum(1 for r in declined
+                                   if request_origin(r) == "new")
+                rejected_requeue = rejected - rejected_new
         elif cands:
             # the eviction floor forced the step: every offered
             # candidate was declined without running the join inverse
             rejected = len(cands)
             reject_axis = forced_axes[0] if forced_axes else None
+            rejected_rids = tuple(r.rid for r in cands)
+            rejected_new = sum(1 for r in cands
+                               if request_origin(r) == "new")
+            rejected_requeue = rejected - rejected_new
 
         # end-of-step footprint: incumbents grow one token; joiners gain
         # two (the prefill-emitted token plus the decode-step token)
@@ -338,7 +410,10 @@ class ContinuousBatcher:
             forced=forced, forced_axes=forced_axes,
             forced_rids=forced_rids, node=self.node,
             rejected=rejected, reject_axis=reject_axis,
-            reject_deficit=reject_deficit)
+            reject_deficit=reject_deficit,
+            rejected_rids=rejected_rids,
+            rejected_new=rejected_new,
+            rejected_requeue=rejected_requeue)
 
     # --- helpers ----------------------------------------------------------
     def _join_demand(self, cands: Sequence[Request]) -> DemandModel:
@@ -353,6 +428,40 @@ class ContinuousBatcher:
         for axis, per_req in self.demand.per_request_axes().items():
             curves[axis] = MemoryFunction("affine", 0.0, per_req)
         return DemandModel(curves, primary_axis="hbm")
+
+    def _join_vector(self, r: Request) -> ResourceVector:
+        """Marginal join demand of one candidate as a single vector:
+        post-step KV at ``context + 2`` (the prefill-emitted token plus
+        the decode-step token) plus every per-request side-car axis —
+        the same costs the prefix curve charges, in the form the
+        knapsack subtracts from headroom."""
+        axes = {"hbm": self.demand.kv_gb(r.context_len + 2)}
+        axes.update(self.demand.per_request_axes())
+        return ResourceVector(**axes)
+
+    def _tenant_usage(self, running: Sequence[Request]
+                      ) -> Dict[Optional[str], ResourceVector]:
+        """This node's per-tenant booked footprint (requests at next
+        step's context), the usage the DRF shares score against."""
+        usage: Dict[Optional[str], ResourceVector] = {}
+        for r in running:
+            usage[r.tenant] = usage.get(r.tenant, ResourceVector()) \
+                + self.demand.request_vector(r, 1)
+        return usage
+
+    def _drf_victim(self, running: Sequence[Request],
+                    now: float) -> Request:
+        """Eviction choice under tenancy: the request of the tenant
+        with the highest weighted dominant share on this node, breaking
+        within that tenant (and between tied tenants) toward the last
+        request in placement order — fairness picks who pays, placement
+        picks which of theirs."""
+        order = self.placement.order_jobs(list(running), now=now)
+        usage = self._tenant_usage(running)
+        shares = {t: self.tenancy.weighted_share_of(t, v, self.budget)
+                  for t, v in usage.items()}
+        return max(enumerate(order),
+                   key=lambda iv: (shares[iv[1].tenant], iv[0]))[1]
 
     def _violated(self, running: Sequence[Request],
                   extra_tokens: int) -> Tuple[str, ...]:

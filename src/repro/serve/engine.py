@@ -57,6 +57,7 @@ from repro.obs.telemetry import sample_node
 from repro.sched.admission import AdmissionController
 from repro.sched.cluster import ClusterRuntime, ClusterState, Node, Router
 from repro.sched.resources import DemandModel, ResourceVector
+from repro.sched.tenancy import Tenant, TenantRegistry
 from repro.sched.topology import Topology
 from repro.serve.backends import Backend, SimBackend
 from repro.serve.batcher import (ContinuousBatcher, ServingDemand,
@@ -97,7 +98,9 @@ class Engine:
                  migrate: bool = False,
                  ingress_gb_per_token: float = 0.0,
                  budgets: Optional[Sequence[ResourceVector]] = None,
-                 tracer=None):
+                 tracer=None,
+                 tenants: Union[TenantRegistry, Sequence[Tenant],
+                                None] = None):
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r} (choose from {MODES})")
         if not isinstance(budget, ResourceVector):
@@ -168,8 +171,21 @@ class Engine:
         self.budgets = budgets
         for node in cluster:
             node.book(_WEIGHTS_KEY, ResourceVector(hbm=demand.weights_gb))
+        #: None (the default) keeps the legacy FIFO-prefix plan and
+        #: routing bit-identical; a registry (or plain Tenant list)
+        #: turns on weighted-DRF fairness in the router, the batchers'
+        #: knapsack joins, and per-tenant metrics
+        if tenants is None or isinstance(tenants, TenantRegistry):
+            self.tenancy = tenants
+        else:
+            self.tenancy = TenantRegistry(tenants)
+        if self.tenancy is not None:
+            for r in self.requests:
+                if r.tenant is not None:
+                    self.tenancy.ensure(r.tenant)
         self.runtime = ClusterRuntime(cluster, router=router,
-                                      topology=topology, tracer=tracer)
+                                      topology=topology, tracer=tracer,
+                                      tenancy=self.tenancy)
         #: None by default — every span/instant below is gated on it,
         #: so untraced runs stay bit-identical to the pre-obs engine
         self.tracer = self.runtime.tracer
@@ -181,7 +197,7 @@ class Engine:
             demand, budgets[r] if budgets is not None else budget,
             controller=self.controller,
             placement=self.queue.placement, max_batch=self.max_batch,
-            node=r) for r in range(self.replicas)]
+            node=r, tenancy=self.tenancy) for r in range(self.replicas)]
         self.batcher = self.batchers[0]
         self.metrics = ServingMetrics()
         for r in self.requests:
@@ -231,13 +247,21 @@ class Engine:
         first node."""
         for req in self.queue.drain_released(now):
             vec = self.demand.request_vector(req)
-            node = self.runtime.route(vec, now=now)
+            node = self.runtime.route(vec, now=now, tenant=req.tenant)
             node.book(req.rid, vec)
+            if self.tenancy is not None:
+                # the routed request is committed tenant load NOW, so a
+                # burst sees each other's growing shares and spreads
+                # (the fairness analogue of the node booking above)
+                self.tenancy.add_usage(req.tenant, node.nid, vec)
             if self.tracer is not None:
+                span_args = {"node": node.nid, "prompt": req.prompt_len}
+                if req.tenant is not None:
+                    span_args["tenant"] = req.tenant
                 self.tracer.async_begin(
                     "req", now, req.rid, cat="request",
                     process="requests", thread="lifecycle",
-                    args={"node": node.nid, "prompt": req.prompt_len})
+                    args=span_args)
             if not self._ingress_transfer(req, node.nid, now):
                 self._pending[node.nid].append(req)
 
@@ -416,6 +440,8 @@ class Engine:
                 r.state = RequestState.FINISHED
                 r.finish_t = now
                 running.remove(r)
+                if self.tenancy is not None:
+                    self.tenancy.observe_request(r)
                 self._trace_req_end(r, now)
 
     def _trace_req_end(self, r: Request, now: float) -> None:
@@ -424,10 +450,12 @@ class Engine:
         (tokens / elapsed) bit-identically — the µs timestamp alone
         loses float precision on the round-trip."""
         if self.tracer is not None:
+            end_args = {"tokens": r.tokens_decoded, "t1": now}
+            if r.tenant is not None:
+                end_args["tenant"] = r.tenant
             self.tracer.async_end(
                 "req", now, r.rid, cat="request", process="requests",
-                thread="lifecycle",
-                args={"tokens": r.tokens_decoded, "t1": now})
+                thread="lifecycle", args=end_args)
 
     def _sync_node(self, ridx: int) -> None:
         """Reconcile the replica Node's claim ledger with its committed
@@ -445,12 +473,19 @@ class Engine:
         for key in node.keys():
             if key != _WEIGHTS_KEY and key not in live:
                 node.release(key)
+        by_tenant: Dict[Optional[str], ResourceVector] = {}
         for rid, r in live.items():
             vec = self.demand.request_vector(r)
             if rid in node:
                 node.rebook(rid, vec)
             else:
                 node.book(rid, vec)
+            if self.tenancy is not None:
+                by_tenant[r.tenant] = \
+                    by_tenant.get(r.tenant, ResourceVector()) + vec
+        if self.tenancy is not None:
+            # registry ledger follows the node ledger exactly
+            self.tenancy.set_node_usage(ridx, by_tenant)
 
     # --- the loops --------------------------------------------------------
     def run(self) -> Dict:
@@ -515,6 +550,8 @@ class Engine:
         self._retire(ridx, t_end)
         self._sync_node(ridx)
         self.metrics.record_step(plan, dt)
+        if self.tenancy is not None:
+            self._observe_tenancy(plan, ridx)
         if self.tracer is not None:
             self._trace_step(plan, ridx, t, t_end, dt_join)
         if self._step_no > self.max_steps:
@@ -523,6 +560,27 @@ class Engine:
                 f"({self.max_steps}) — termination invariant broken")
         self._clocks[ridx] = t_end
         self._push_step(t_end, ridx)
+
+    def _observe_tenancy(self, plan: StepDecision, ridx: int) -> None:
+        """Fold one step into the fairness state: per-tenant reject
+        signals (requeue-vs-new, so preemption churn doesn't read as
+        demand mis-prediction) into the registry's credit windows and
+        the metrics' per-tenant counters, plus a dominant-share sample
+        per named tenant on the stepping node."""
+        reg = self.tenancy
+        for rid in plan.rejected_rids:
+            r = self._by_rid[rid]
+            origin = "requeue" if (r.admissions > 0
+                                   or r.preemptions > 0) else "new"
+            reg.observe_reject(r.tenant, origin)
+            self.metrics.record_tenant_reject(r.tenant, origin)
+        node = self.runtime.cluster[ridx]
+        for name in reg.names():
+            if name is None:
+                continue
+            self.metrics.record_tenant_share(
+                name, reg.dominant_share(reg.usage(name, ridx),
+                                         node.capacity))
 
     def _trace_step(self, plan: StepDecision, ridx: int, t: float,
                     t_end: float, dt_join: float) -> None:
@@ -640,6 +698,8 @@ class Engine:
                 r.state = RequestState.FINISHED
                 r.finish_t = t
                 self._running[0].remove(r)
+                if self.tenancy is not None:
+                    self.tenancy.observe_request(r)
                 self._trace_req_end(r, t)
             self.backend.remove(wave_live)
             self._sync_node(0)

@@ -62,8 +62,16 @@ class ServingMetrics:
         #: bound the join inverse ("cap" when no axis was recorded)
         self.rejects_by_axis: Dict[str, int] = {}
         self._rejected_joins = 0
+        #: the same declines split by provenance: "new" = first-offer
+        #: work that didn't fit (demand mis-prediction), "requeue" =
+        #: preempted work bouncing off re-admission (scheduler churn)
+        self.rejects_by_origin: Dict[str, int] = {}
         #: per-link utilization (topology runs; see Topology.link_stats)
         self.link_stats: Dict[str, Dict] = {}
+        #: per-tenant fairness accounting (tenancy runs; empty dicts
+        #: otherwise, so untenanted summaries stay shape-stable)
+        self._tenant_shares: Dict[str, List[float]] = {}
+        self._tenant_rejects: Dict[str, Dict[str, int]] = {}
 
     # --- recording --------------------------------------------------------
     def record_step(self, dec: StepDecision, dt: float) -> None:
@@ -84,6 +92,15 @@ class ServingMetrics:
             axis = getattr(dec, "reject_axis", None) or "cap"
             self.rejects_by_axis[axis] = \
                 self.rejects_by_axis.get(axis, 0) + rejected
+            new = getattr(dec, "rejected_new", 0)
+            requeue = getattr(dec, "rejected_requeue", 0)
+            if new or requeue:
+                if new:
+                    self.rejects_by_origin["new"] = \
+                        self.rejects_by_origin.get("new", 0) + new
+                if requeue:
+                    self.rejects_by_origin["requeue"] = \
+                        self.rejects_by_origin.get("requeue", 0) + requeue
         self.node_steps[dec.node] = self.node_steps.get(dec.node, 0) + 1
 
     def record_request(self, req: Request) -> None:
@@ -99,6 +116,20 @@ class ServingMetrics:
         """Attach the topology's end-of-run per-link ledger (busy
         seconds/fraction, GB moved, peak concurrent flows)."""
         self.link_stats = {name: dict(st) for name, st in stats.items()}
+
+    def record_tenant_share(self, tenant: str, share: float) -> None:
+        """One dominant-share sample (usage fraction of the binding
+        axis) for a named tenant — the engine samples once per planned
+        step on the stepping node."""
+        self._tenant_shares.setdefault(tenant, []).append(float(share))
+
+    def record_tenant_reject(self, tenant: Optional[str],
+                             origin: str) -> None:
+        """One declined join candidate attributed to its tenant, split
+        by requeue-vs-new origin (untenanted requests bucket under
+        ``""``)."""
+        by = self._tenant_rejects.setdefault(tenant or "", {})
+        by[origin] = by.get(origin, 0) + 1
 
     # --- summary ----------------------------------------------------------
     def summary(self, elapsed: Optional[float] = None) -> Dict:
@@ -117,6 +148,35 @@ class ServingMetrics:
         slo_done = [r for r in done if r.meets_slo()]
         slo_tokens = sum(r.tokens_decoded for r in slo_done)
         batches = [d.batch for d in self.steps if d.batch > 0]
+        # per-tenant fairness view: goodput / SLO attainment / dominant
+        # share per named tenant (empty when no request carries one)
+        tnames = sorted({r.tenant for r in self.requests
+                         if r.tenant is not None}
+                        | set(self._tenant_shares)
+                        | {k for k in self._tenant_rejects if k})
+        tenants: Dict[str, Dict] = {}
+        for name in tnames:
+            treqs = [r for r in self.requests if r.tenant == name]
+            tdone = [r for r in treqs
+                     if r.state == RequestState.FINISHED]
+            tslo = [r for r in tdone if r.meets_slo()]
+            tgood = sum(r.tokens_decoded for r in tdone)
+            tslo_tok = sum(r.tokens_decoded for r in tslo)
+            shares = self._tenant_shares.get(name, [])
+            tenants[name] = {
+                "requests": len(treqs),
+                "completed": len(tdone),
+                "good_tokens": tgood,
+                "goodput_tok_s": tgood / max(elapsed, 1e-12),
+                "slo_good_tokens": tslo_tok,
+                "slo_goodput_tok_s": tslo_tok / max(elapsed, 1e-12),
+                "slo_attainment": len(tslo) / max(len(tdone), 1),
+                "dominant_share_mean": float(np.mean(shares))
+                if shares else 0.0,
+                "dominant_share_peak": float(np.max(shares))
+                if shares else 0.0,
+                "rejects": dict(self._tenant_rejects.get(name, {})),
+            }
         return {
             "requests": len(self.requests),
             "completed": len(done),
@@ -148,8 +208,10 @@ class ServingMetrics:
             # PR): deterministic, so goldens may pin these too
             "rejected_joins": self._rejected_joins,
             "rejects_by_axis": dict(self.rejects_by_axis),
+            "rejects_by_origin": dict(self.rejects_by_origin),
             "links": {name: dict(st)
                       for name, st in self.link_stats.items()},
+            "tenants": tenants,
         }
 
     def format_summary(self, s: Optional[Dict] = None) -> str:

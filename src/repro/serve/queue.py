@@ -46,7 +46,8 @@ def requests_from_arrivals(arrivals: Sequence[Arrival], *,
                                max_new_tokens + 1)) if vary_new \
             else int(max_new_tokens)
         out.append(Request(rid=i, prompt_len=plen, max_new_tokens=new,
-                           arrival=float(a.t)))
+                           arrival=float(a.t),
+                           tenant=getattr(a, "tenant", None)))
     return out
 
 

@@ -45,6 +45,9 @@ class Request:
     ttft_deadline: Optional[float] = None
     #: max mean seconds per output token after the first (decode cadence)
     tpot_deadline: Optional[float] = None
+    #: owning tenant for fairness accounting (None = untenanted; all
+    #: such requests share one default bucket — see sched.tenancy)
+    tenant: Optional[str] = None
 
     # --- lifecycle (owned by the engine) ---------------------------------
     state: RequestState = RequestState.QUEUED

@@ -1,0 +1,343 @@
+"""The multi-tenant fairness subsystem (repro/sched/tenancy.py):
+
+* Tenant / TenantRegistry — validation, round-trip serialization,
+  credit scoring from live SLO / latency / reject signals;
+* credit monotonicity — a tenant's weighted dominant share never
+  DECREASES as its credit degrades (worse behavior can only push it
+  later in the admission order);
+* pack_step — the per-node knapsack never exceeds headroom on any
+  axis, never admits less than the FIFO prefix would have, splits a
+  saturated node by weight (sharing incentive), and is deterministic;
+* WeightedDRFRouter — with no registry bound it degrades exactly to
+  least-loaded; with one bound it spreads a tenant across replicas;
+* the engine seam — ``tenants=None`` leaves the schedule bit-identical
+  (tenant labels on requests are inert without a registry), tenanted
+  runs are seeded-deterministic, and per-step reject origins reconcile
+  with the summary's ``rejects_by_origin``.
+"""
+import numpy as np
+import pytest
+
+from repro.sched import (Tenant, TenantRegistry, get_router,
+                         pack_step, request_origin)
+from repro.sched.resources import ResourceVector
+from repro.sched.tenancy import Skip  # noqa: F401  (structured reason)
+from repro.serve import Engine, Request, ServingDemand
+
+
+def make_requests(n, seed=0, rate=20.0, tenant=None, ttft=0.25):
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return [Request(rid=i, prompt_len=int(rng.integers(8, 24)),
+                    max_new_tokens=int(rng.integers(8, 32)),
+                    arrival=float(t[i]), ttft_deadline=ttft,
+                    tpot_deadline=0.05, tenant=tenant)
+            for i in range(n)]
+
+
+def tagged(rids, tenant):
+    """Minimal join candidates for pack_step: fresh Requests carrying
+    a tenant, rid order == queue order."""
+    return [Request(rid=r, prompt_len=8, max_new_tokens=8,
+                    arrival=0.0, tenant=tenant) for r in rids]
+
+
+# --- Tenant / TenantRegistry -------------------------------------------------
+
+def test_tenant_validation():
+    with pytest.raises(ValueError):
+        Tenant("a", weight=0.0)
+    with pytest.raises(ValueError):
+        Tenant("a", weight=-1.0)
+    with pytest.raises(ValueError):
+        Tenant("a", error_budget=1.5)
+    with pytest.raises(ValueError):
+        TenantRegistry(window=0)
+    with pytest.raises(ValueError):
+        TenantRegistry(min_credit=0.0)
+    reg = TenantRegistry([Tenant("a")])
+    with pytest.raises(ValueError):
+        reg.add(Tenant("a"))        # duplicate
+
+
+def test_registry_round_trip():
+    reg = TenantRegistry(
+        [Tenant("gold", weight=2.0, error_budget=0.05),
+         Tenant("bronze", weight=0.5)], window=32, min_credit=0.1)
+    back = TenantRegistry.from_dict(reg.to_dict())
+    assert back.window == 32 and back.min_credit == 0.1
+    assert back.names() == ("gold", "bronze")
+    for name in reg.names():
+        assert back.get(name) == reg.get(name)
+    # live state does not persist: fresh registry has full credit
+    reg.observe_slo("gold", False)
+    back2 = TenantRegistry.from_dict(reg.to_dict())
+    assert back2.credit("gold") == 1.0
+
+
+def test_credit_signals_and_floor():
+    reg = TenantRegistry([Tenant("a", error_budget=0.1)], window=10)
+    assert reg.credit("a") == 1.0          # no history = full credit
+    for _ in range(10):
+        reg.observe_slo("a", True)
+    assert reg.credit("a") == 1.0          # perfect attainment
+    for _ in range(10):
+        reg.observe_slo("a", False)        # window now all misses
+    assert reg.credit("a") == reg.min_credit
+    # latency: sustained p99 at 2x target halves the latency score
+    reg2 = TenantRegistry([Tenant("b")], window=10)
+    for _ in range(10):
+        reg2.observe_latency_ratio("b", 2.0)
+    assert reg2.credit("b") == pytest.approx(0.5)
+    # prediction: only origin == "new" rejects degrade credit
+    reg3 = TenantRegistry([Tenant("c")], window=4)
+    for _ in range(8):
+        reg3.observe_reject("c", origin="requeue")
+    assert reg3.credit("c") == 1.0
+    reg3.observe_reject("c", origin="new")
+    assert reg3.credit("c") < 1.0
+    assert reg3.rejects["c"] == {"requeue": 8, "new": 1}
+
+
+def test_credit_monotonicity_in_weighted_share():
+    """The pinned invariant: as a tenant's credit degrades, its
+    weighted dominant share (for the SAME usage) never decreases —
+    lower credit can only push it later in the admission order."""
+    reg = TenantRegistry([Tenant("a")], window=16)
+    cap = ResourceVector(hbm=10.0, host_ram=4.0)
+    vec = ResourceVector(hbm=2.0, host_ram=1.0)
+    shares = [reg.weighted_share_of("a", vec, cap)]
+    for _ in range(16):
+        reg.observe_slo("a", False)
+        shares.append(reg.weighted_share_of("a", vec, cap))
+    assert all(b >= a - 1e-12 for a, b in zip(shares, shares[1:]))
+    assert shares[-1] > shares[0]
+
+
+def test_dominant_share_ignores_uncapacitated_axes():
+    cap = ResourceVector(hbm=10.0)
+    vec = ResourceVector(hbm=1.0, net=99.0)   # net has no capacity
+    assert TenantRegistry.dominant_share(vec, cap) == pytest.approx(0.1)
+
+
+def test_usage_ledger_reconcile():
+    reg = TenantRegistry([Tenant("a"), Tenant("b")])
+    reg.add_usage("a", 0, ResourceVector(hbm=1.0))
+    reg.add_usage("a", 1, ResourceVector(hbm=2.0))
+    reg.add_usage("b", 0, ResourceVector(hbm=4.0))
+    assert reg.usage("a").get("hbm") == pytest.approx(3.0)
+    reg.set_node_usage(0, {"b": ResourceVector(hbm=0.5)})
+    assert reg.usage("a").get("hbm") == pytest.approx(2.0)  # node 0 gone
+    assert reg.usage("b", 0).get("hbm") == pytest.approx(0.5)
+
+
+def test_request_origin():
+    r = Request(rid=0, prompt_len=4, max_new_tokens=4, arrival=0.0)
+    assert request_origin(r) == "new"
+    r.admissions = 1
+    assert request_origin(r) == "requeue"
+    r2 = Request(rid=1, prompt_len=4, max_new_tokens=4, arrival=0.0)
+    r2.preemptions = 2
+    assert request_origin(r2) == "requeue"
+
+
+# --- pack_step ---------------------------------------------------------------
+
+def test_pack_never_over_budget_and_beats_fifo_prefix():
+    reg = TenantRegistry([Tenant("a"), Tenant("b")])
+    rng = np.random.default_rng(3)
+    cands = []
+    sizes = {}
+    for i in range(16):
+        r = tagged([i], "a" if i % 2 else "b")[0]
+        cands.append(r)
+        sizes[i] = float(rng.uniform(0.5, 3.0))
+    headroom = ResourceVector(hbm=6.0)
+    cap = ResourceVector(hbm=6.0)
+    vec_of = lambda r: ResourceVector(hbm=sizes[r.rid])  # noqa: E731
+    admitted, skips = pack_step(reg, cands, headroom, cap, {},
+                                vec_of, slots=len(cands))
+    used = ResourceVector()
+    for r in admitted:
+        used = used + vec_of(r)
+    assert used.fits(headroom)
+    # the FIFO prefix: admit in order until the first misfit
+    fifo, acc = 0, 0.0
+    for r in cands:
+        if acc + sizes[r.rid] > 6.0:
+            break
+        acc += sizes[r.rid]
+        fifo += 1
+    assert len(admitted) >= fifo
+    # every skip names the binding axis and a positive deficit
+    for s in skips:
+        assert s.axis == "hbm" and s.deficit > 0.0
+        assert s.origin == "new"
+    # determinism: identical call, identical plan
+    admitted2, skips2 = pack_step(reg, cands, headroom, cap, {},
+                                  vec_of, slots=len(cands))
+    assert [r.rid for r in admitted2] == [r.rid for r in admitted]
+    assert skips2 == skips
+
+
+def test_pack_sharing_incentive_and_weights():
+    """Saturated node, equal weights: the split is even (each tenant is
+    no worse off than under a static 1/n partition).  Doubling one
+    tenant's weight doubles its slice."""
+    vec_of = lambda r: ResourceVector(hbm=1.0)  # noqa: E731
+    headroom = ResourceVector(hbm=8.0)
+    cap = ResourceVector(hbm=8.0)
+    cands = tagged(range(0, 8), "a") + tagged(range(8, 16), "b")
+    reg = TenantRegistry([Tenant("a"), Tenant("b")])
+    admitted, _ = pack_step(reg, cands, headroom, cap, {}, vec_of,
+                            slots=16)
+    by = {"a": 0, "b": 0}
+    for r in admitted:
+        by[r.tenant] += 1
+    assert by == {"a": 4, "b": 4}
+    reg2 = TenantRegistry([Tenant("a", weight=2.0), Tenant("b")])
+    admitted2, _ = pack_step(reg2, cands, headroom, cap, {}, vec_of,
+                             slots=16)
+    by2 = {"a": 0, "b": 0}
+    for r in admitted2:
+        by2[r.tenant] += 1
+    assert by2["a"] > by2["b"]
+    assert by2["a"] + by2["b"] == 8
+
+
+def test_pack_skip_does_not_block_smaller_later():
+    """A tenant's oversized head-of-line request is skipped, not a
+    roadblock: later smaller candidates (any tenant) still land."""
+    reg = TenantRegistry([Tenant("a"), Tenant("b")])
+    big, small_a, small_b = tagged([0], "a") + tagged([1], "a") \
+        + tagged([2], "b")
+    sizes = {0: 10.0, 1: 1.0, 2: 1.0}
+    vec_of = lambda r: ResourceVector(hbm=sizes[r.rid])  # noqa: E731
+    admitted, skips = pack_step(
+        reg, [big, small_a, small_b], ResourceVector(hbm=2.0),
+        ResourceVector(hbm=2.0), {}, vec_of, slots=3)
+    assert sorted(r.rid for r in admitted) == [1, 2]
+    assert [s.rid for s in skips] == [0]
+
+
+def test_pack_slot_cap_produces_no_skips():
+    """Candidates beyond the batch-slot cap were not reached, not
+    rejected — they must not inflate per-tenant reject counters."""
+    reg = TenantRegistry([Tenant("a")])
+    vec_of = lambda r: ResourceVector(hbm=1.0)  # noqa: E731
+    admitted, skips = pack_step(
+        reg, tagged(range(6), "a"), ResourceVector(hbm=100.0),
+        ResourceVector(hbm=100.0), {}, vec_of, slots=2)
+    assert len(admitted) == 2 and skips == []
+
+
+# --- WeightedDRFRouter -------------------------------------------------------
+
+def _nodes(n, seed):
+    from repro.sched import Node
+    rng = np.random.default_rng(seed)
+    nodes = []
+    for i in range(n):
+        node = Node(nid=i, capacity=ResourceVector(hbm=8.0, net=1.0))
+        node.book(f"bg{i}", ResourceVector(
+            hbm=float(rng.uniform(0.0, 6.0)),
+            net=float(rng.uniform(0.0, 0.8))))
+        nodes.append(node)
+    return nodes
+
+
+def test_drf_router_without_registry_is_least_loaded():
+    drf, ll = get_router("drf"), get_router("least-loaded")
+    demand = ResourceVector(hbm=1.0, net=0.1)
+    for seed in range(8):
+        nodes = _nodes(4, seed)
+        assert drf.route(demand, nodes).nid == ll.route(demand, nodes).nid
+
+
+def test_drf_router_spreads_a_tenant():
+    """With a registry bound, the router sends a tenant's next request
+    to the node where that tenant's post-placement share is lowest —
+    its existing concentration, not the global load, decides."""
+    from repro.sched import Node
+    reg = TenantRegistry([Tenant("a")])
+    reg.add_usage("a", 0, ResourceVector(hbm=4.0))
+    nodes = [Node(nid=i, capacity=ResourceVector(hbm=8.0))
+             for i in range(2)]
+    # node 0 is globally EMPTIER, but tenant a already sits there
+    nodes[1].book("bg", ResourceVector(hbm=2.0))
+    router = get_router("drf")
+    router.tenancy, router.tenant = reg, "a"
+    try:
+        assert router.route(ResourceVector(hbm=1.0), nodes).nid == 1
+    finally:
+        router.tenancy = router.tenant = None
+
+
+# --- the engine seam ---------------------------------------------------------
+
+def _engine(requests, tenants=None, router="least-loaded", replicas=2):
+    demand = ServingDemand(weights_gb=0.5, kv_gb_per_token=2e-4,
+                           host_ram_per_req_gb=0.01)
+    budget = ResourceVector(hbm=0.5 + 2e-4 * 56 * 4.0, host_ram=0.08)
+    return Engine(requests, demand, budget, mode="continuous",
+                  placement="fcfs", max_batch=8, replicas=replicas,
+                  router=router, tenants=tenants)
+
+
+def _mixed(seed=0):
+    reqs = make_requests(24, seed=seed, rate=40.0)
+    for i, r in enumerate(reqs):
+        r.tenant = ("a", "b", "c")[i % 3]
+    return reqs
+
+
+def test_untenanted_labels_are_inert():
+    """tenants=None: tenant labels on requests must not change the
+    schedule — same summary as the unlabeled run, apart from the
+    (purely observational) per-tenant breakdown."""
+    plain = _engine(make_requests(24, rate=40.0)).run()
+    labeled = _engine(_mixed()).run()
+    assert labeled["tenants"] != {}      # observed
+    for k, v in plain.items():
+        if k != "tenants":
+            assert labeled[k] == v, k
+    assert plain["rejects_by_origin"] == labeled["rejects_by_origin"]
+
+
+def test_tenanted_run_deterministic_and_reconciled():
+    def run():
+        reg = TenantRegistry([Tenant("a", weight=2.0), Tenant("b"),
+                              Tenant("c")])
+        eng = _engine(_mixed(), tenants=reg, router="drf")
+        return eng.run(), reg, eng
+    s1, reg1, eng1 = run()
+    s2, reg2, _ = run()
+    assert s1 == s2                      # seeded determinism
+    assert set(s1["tenants"]) == {"a", "b", "c"}
+    assert s1["completed"] == 24
+    # per-origin reject totals reconcile with the step records
+    by_origin = {"new": 0, "requeue": 0}
+    for dec in eng1.metrics.steps:
+        by_origin["new"] += dec.rejected_new
+        by_origin["requeue"] += dec.rejected_requeue
+        assert len(dec.rejected_rids) == \
+            dec.rejected_new + dec.rejected_requeue
+    assert {k: v for k, v in by_origin.items() if v} \
+        == s1["rejects_by_origin"]
+    # registry credit is live and bounded
+    for name in ("a", "b", "c"):
+        assert reg1.min_credit <= reg1.credit(name) <= 1.0
+    # summary() surfaces the same tenants with their reject counters
+    table = reg1.summary()
+    assert set(table) == {"a", "b", "c"}
+
+
+def test_registry_list_seam_and_auto_register():
+    """Engine(tenants=[Tenant(...)]) wraps a registry; unknown tenant
+    names arriving on requests register themselves at weight 1.0."""
+    eng = _engine(_mixed(), tenants=[Tenant("a", weight=2.0)],
+                  router="drf")
+    assert "a" in eng.tenancy and "b" in eng.tenancy
+    assert eng.tenancy.get("b").weight == 1.0
+    summary = eng.run()
+    assert summary["completed"] == 24

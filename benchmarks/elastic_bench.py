@@ -1,0 +1,342 @@
+"""Elastic runtime acceptance bench (``repro.sched.elastic``): rigid
+OURS vs elastic OURS under the same hostile environment — a diurnal
+arrival stream with deterministic seeded host failures on the cluster
+simulator, and a bursty request stream with replica failures on the
+serving engine.
+
+Two cells, one acceptance bar each, both STRICT:
+
+* **simulator / diurnal+failures** — a memory-scarce cluster fed a
+  low-high-low diurnal stream of spill-friendly (slope-dominated) jobs
+  while a :class:`FailureSchedule` knocks hosts out.  Elastic OURS
+  (``SimConfig.elastic`` bound: a chunk that does not fit a host's
+  headroom may run on a shrunken memory fraction at the modeled spill
+  slowdown) must STRICTLY beat rigid OURS on STP.  The mechanism:
+  rigid admission either waits or force-places on empty hosts and pays
+  the 8x paging slowdown + OOM kill-retry churn; elastic admission
+  caps the resident set at the granted fraction and pays a PRICED
+  <= ``SIM_MAX_SLOWDOWN`` spill slowdown instead.  Both runs share the
+  identical failure plan (same seed, pre-drawn events).
+
+* **serving / burst+failures** — a steady request stream with a 7.5x
+  burst on a KV-tight replica cell while the failure plan kills and
+  repairs replicas (live requests drain and requeue).  Elastic serving
+  (SHALLOW shrunken joins — fractions >= 0.75 priced under a 1.5x cap
+  — plus queue/SLO-trend autoscaling over pre-provisioned spare
+  replicas) must STRICTLY beat the rigid fleet on SLO goodput, under
+  the same failures and the same arrivals.  Deep shrinks lose here
+  (admit-evict churn as frozen grants outgrow the budget), which is
+  exactly why the depth knob exists — the bench pins the regime where
+  shrinking helps.
+
+Numbers land in ``BENCH_elastic.json`` at the repo root (STP and SLO
+goodput both cells, shrink/fail/repair/scale event counts), so the
+elastic-runtime trajectory is pinned across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run --bench elastic_bench
+    PYTHONPATH=src python -m benchmarks.run --smoke --bench elastic_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import SMOKE, emit, get_suite, save_result
+
+# --- the simulator cell: diurnal stream + host failures --------------------
+SIM_SEED = 42
+# (rate jobs/s, duration s): quiet ramp, peak, quiet drain.  The peak
+# keeps the memory-scarce hosts busy enough that chunk-sized headroom
+# is rare, so spill-aware shrinking has something to relieve.
+SIM_PHASES = ((0.004, 400.0), (0.06, 1200.0), (0.004, 400.0))
+SIM_HOSTS = 4
+SIM_HOST_MEM_GB = 10.0          # memory-scarce vs medium-job chunks
+SIM_TASKS_PER_SLOT = 2          # coarse partitions: chunks big enough
+#                                 that a full-size slot is a real ask
+SIM_MTBF_S = 600.0              # per-fleet failure cadence (virtual s)
+SIM_REPAIR_S = 120.0
+SIM_MAX_SLOWDOWN = 2.9          # just under the spill model's 3.0 cost:
+#                                 deep shrinks admit, disk-bound ones don't
+#: jobs whose memory floor (quarter-chunk intercept) stays under 1 GB —
+#: the slope-dominated ETL mix where spilling is physically meaningful
+#: (a PageRank-style 20 GB resident floor cannot spill)
+SIM_FLOOR_GB = 1.0
+SIM_SIZE_WEIGHTS = {"small": 0.5, "medium": 0.5, "large": 0.0}
+
+# --- the serving cell: burst + replica failures ----------------------------
+SRV_SEED = 11
+SRV_REPLICAS = 2                # the rigid fleet
+SRV_AUTOSCALE_MAX = 4           # elastic fleet ceiling (spares start down)
+SRV_N_STEADY = 8
+SRV_N_BURST = 32
+SRV_RATE_STEADY = 8.0           # requests/s of virtual time
+SRV_RATE_BURST = 60.0           # the 7.5x burst
+SRV_PROMPT_LEN = 24
+SRV_MAX_NEW = 32
+SRV_WEIGHTS_GB = 0.5
+SRV_KV_GB_PER_TOKEN = 2e-4
+SRV_KV_MULT = 2.0               # KV-tight: joins actually compete
+SRV_TTFT_SLO_S = 0.15
+SRV_TPOT_SLO_S = 0.05
+SRV_MTBF_S = 1.5                # replica failures during the burst
+SRV_REPAIR_S = 0.4
+SRV_FAIL_HORIZON_S = 2.5
+SRV_AUTOSCALE_INTERVAL_S = 0.1
+# shallow shrink: joins at >= 3/4 of the full KV grant, priced under a
+# 1.5x step-slowdown cap (the sweep showed deep shrinks churn)
+SRV_SHRINK_SLOWDOWN = 1.4
+SRV_SHRINK_MIN_FRACTION = 0.75
+SRV_MAX_SLOWDOWN = 1.5
+
+BENCH_ELASTIC_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_elastic.json")
+
+
+def _spilly_apps():
+    """The slope-dominated sub-universe: apps whose quarter-chunk
+    footprint is essentially all working set (intercept < 1 GB), so a
+    shrunken grant genuinely spills items instead of cutting an
+    incompressible resident floor."""
+    apps, train, moe, ann = get_suite()
+    return [a for a in apps if a.measure(0.0625) < SIM_FLOOR_GB], moe
+
+
+def _diurnal_arrivals(apps, seed: int):
+    """A deterministic low-high-low job stream: per-phase Poisson gaps
+    at the phase rate, apps uniform over the spilly mix, sizes from
+    the small/medium class mix (the 1000 M-item "large" class would
+    saturate the 4-host cell for the whole run)."""
+    from repro.sched.arrivals import Arrival, sample_input_size
+
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    for rate, dur in SIM_PHASES:
+        end = t + dur
+        while True:
+            t += float(rng.exponential(1.0 / rate))
+            if t >= end:
+                t = end
+                break
+            app = apps[int(rng.choice(len(apps)))]
+            out.append(Arrival(t, app,
+                               sample_input_size(rng, SIM_SIZE_WEIGHTS)))
+    return out
+
+
+def _sim_failure_plan():
+    """A fresh identical plan per run (attach pushes events into the
+    run's own runtime; sharing one object would double-count its
+    ``n_failed`` ledger across cells)."""
+    from repro.sched import FailureSchedule
+    horizon = sum(d for _, d in SIM_PHASES)
+    return FailureSchedule.poisson(
+        seed=SIM_SEED, mtbf_s=SIM_MTBF_S, n_targets=SIM_HOSTS,
+        horizon_s=horizon, repair_s=SIM_REPAIR_S)
+
+
+def _run_sim(elastic_on: bool):
+    """One diurnal+failures run of OURS on the memory-scarce cluster;
+    only ``SimConfig.elastic`` differs between the rigid and elastic
+    variants."""
+    from repro.core.simulator import OursPolicy, SimConfig, Simulator
+    from repro.sched import ElasticController, get_estimator
+
+    apps, moe = _spilly_apps()
+    cfg = SimConfig(
+        n_hosts=SIM_HOSTS, host_mem_gb=SIM_HOST_MEM_GB,
+        tasks_per_slot=SIM_TASKS_PER_SLOT,
+        failure_plan=_sim_failure_plan(),
+        elastic=ElasticController(max_slowdown=SIM_MAX_SLOWDOWN)
+        if elastic_on else None)
+    policy = OursPolicy(estimator=get_estimator("moe", predictor=moe))
+    sim = Simulator(None, policy, cfg, seed=SIM_SEED,
+                    arrivals=_diurnal_arrivals(apps, SIM_SEED))
+    out = sim.run()
+    out["shrunk_spawns"] = int(
+        sim.telemetry.counters.get("elastic.shrink", 0))
+    out["failures_injected"] = cfg.failure_plan.n_failed
+    return out
+
+
+def _burst_requests():
+    """Steady arrivals, then a 7.5x burst: the queue-depth signal the
+    autoscaler keys on, and the contention the shrunken joins relieve."""
+    from repro.serve import Request
+
+    rng = np.random.default_rng(SRV_SEED)
+    arrivals = []
+    t = 0.0
+    for _ in range(SRV_N_STEADY):
+        t += float(rng.exponential(1.0 / SRV_RATE_STEADY))
+        arrivals.append(t)
+    for _ in range(SRV_N_BURST):
+        t += float(rng.exponential(1.0 / SRV_RATE_BURST))
+        arrivals.append(t)
+    return [Request(rid=i,
+                    prompt_len=int(rng.integers(SRV_PROMPT_LEN // 2,
+                                                SRV_PROMPT_LEN + 1)),
+                    max_new_tokens=int(rng.integers(SRV_MAX_NEW // 4,
+                                                    SRV_MAX_NEW + 1)),
+                    arrival=float(a),
+                    ttft_deadline=SRV_TTFT_SLO_S,
+                    tpot_deadline=SRV_TPOT_SLO_S)
+            for i, a in enumerate(arrivals)]
+
+
+def _srv_failure_plan():
+    from repro.sched import FailureSchedule
+    return FailureSchedule.poisson(
+        seed=SRV_SEED + 1, mtbf_s=SRV_MTBF_S, n_targets=SRV_REPLICAS,
+        horizon_s=SRV_FAIL_HORIZON_S, repair_s=SRV_REPAIR_S)
+
+
+def _run_serving(elastic_on: bool):
+    """One burst+failures serving run; the elastic variant adds
+    shallow shrunken joins and autoscaling over pre-provisioned
+    spares, the failure plan and the arrivals are identical."""
+    from repro.sched import Autoscaler, ElasticController
+    from repro.sched.elastic import SlowdownCurve
+    from repro.sched.resources import ResourceVector
+    from repro.serve import Engine, ServingDemand
+
+    full_ctx = SRV_PROMPT_LEN + SRV_MAX_NEW
+    demand = ServingDemand(weights_gb=SRV_WEIGHTS_GB,
+                           kv_gb_per_token=SRV_KV_GB_PER_TOKEN)
+    budget = ResourceVector(
+        hbm=SRV_WEIGHTS_GB
+        + SRV_KV_GB_PER_TOKEN * full_ctx * SRV_KV_MULT)
+    elastic = autoscaler = None
+    if elastic_on:
+        # the serving demand's shrink curve: the kv-growth estimator
+        # attaches one on the CLI path; the bench's hand-built demand
+        # declares the shallow linear family explicitly
+        demand.shrink = SlowdownCurve.linear(
+            SRV_SHRINK_SLOWDOWN,
+            min_fraction=SRV_SHRINK_MIN_FRACTION)
+        elastic = ElasticController(max_slowdown=SRV_MAX_SLOWDOWN)
+        autoscaler = Autoscaler(max_replicas=SRV_AUTOSCALE_MAX,
+                                min_replicas=SRV_REPLICAS,
+                                interval_s=SRV_AUTOSCALE_INTERVAL_S,
+                                sustain=2)
+    engine = Engine(_burst_requests(), demand, budget,
+                    mode="continuous", placement="fcfs", max_batch=32,
+                    replicas=SRV_REPLICAS, router="least-loaded",
+                    failures=_srv_failure_plan(), elastic=elastic,
+                    autoscaler=autoscaler)
+    summary = engine.run()
+    for dec in engine.metrics.steps:
+        assert dec.booked.fits(dec.budget) or dec.forced, (
+            f"unforced over-budget step in elastic bench: {dec}")
+    return summary
+
+
+def main() -> dict:
+    # --- simulator: diurnal + host failures, rigid vs elastic -------------
+    rigid = _run_sim(elastic_on=False)
+    elastic = _run_sim(elastic_on=True)
+    stp_ratio = elastic["stp"] / max(rigid["stp"], 1e-12)
+    emit("elastic/sim/stp_rigid", f"{rigid['stp']:.3f}",
+         f"antt {rigid['antt']:.1f}, {rigid['oom_count']} OOM kills, "
+         f"{rigid['failures_injected']} host failures injected")
+    emit("elastic/sim/stp_elastic", f"{elastic['stp']:.3f}",
+         f"antt {elastic['antt']:.1f}, {elastic['oom_count']} OOM "
+         f"kills, {elastic['shrunk_spawns']} shrunken executor spawns")
+    emit("elastic/sim/stp_ratio", f"{stp_ratio:.3f}",
+         "elastic / rigid OURS, diurnal stream + failure plan")
+
+    # --- serving: burst + replica failures, rigid vs elastic fleet --------
+    srigid = _run_serving(elastic_on=False)
+    selastic = _run_serving(elastic_on=True)
+    slo_ratio = selastic["slo_goodput_tok_s"] \
+        / max(srigid["slo_goodput_tok_s"], 1e-12)
+    el = selastic.get("elastic", {})
+    ev = el.get("replica_events", {})
+    rigid_fails = srigid.get("elastic", {}).get(
+        "replica_events", {}).get("fail", 0)
+    emit("elastic/serve/slo_goodput_rigid",
+         f"{srigid['slo_goodput_tok_s']:.1f}",
+         f"attainment {srigid['slo_attainment']:.2f}, "
+         f"{rigid_fails} replica failures")
+    emit("elastic/serve/slo_goodput_elastic",
+         f"{selastic['slo_goodput_tok_s']:.1f}",
+         f"attainment {selastic['slo_attainment']:.2f}, "
+         f"{el.get('shrunk_joins', 0)} shrunken joins, events "
+         f"[{' '.join(f'{k}:{n}' for k, n in sorted(ev.items()))}]")
+    emit("elastic/serve/slo_ratio", f"{slo_ratio:.3f}",
+         "elastic (shallow shrink + autoscale) / rigid fleet")
+
+    payload = {
+        "smoke": SMOKE,
+        "sim": {
+            "seed": SIM_SEED, "hosts": SIM_HOSTS,
+            "host_mem_gb": SIM_HOST_MEM_GB,
+            "phases": [list(p) for p in SIM_PHASES],
+            "mtbf_s": SIM_MTBF_S, "repair_s": SIM_REPAIR_S,
+            "max_slowdown": SIM_MAX_SLOWDOWN,
+            "rigid": {"stp": rigid["stp"], "antt": rigid["antt"],
+                      "oom": rigid["oom_count"],
+                      "failures": rigid["failures_injected"]},
+            "elastic": {"stp": elastic["stp"], "antt": elastic["antt"],
+                        "oom": elastic["oom_count"],
+                        "shrunk_spawns": elastic["shrunk_spawns"],
+                        "failures": elastic["failures_injected"]},
+            "stp_ratio": stp_ratio},
+        "serving": {
+            "seed": SRV_SEED, "replicas": SRV_REPLICAS,
+            "autoscale_max": SRV_AUTOSCALE_MAX,
+            "kv_mult": SRV_KV_MULT, "mtbf_s": SRV_MTBF_S,
+            "shrink": {"slowdown": SRV_SHRINK_SLOWDOWN,
+                       "min_fraction": SRV_SHRINK_MIN_FRACTION,
+                       "cap": SRV_MAX_SLOWDOWN},
+            "rigid": {
+                "goodput_tok_s": srigid["goodput_tok_s"],
+                "slo_goodput_tok_s": srigid["slo_goodput_tok_s"],
+                "slo_attainment": srigid["slo_attainment"],
+                "preemptions": srigid["preemptions"],
+                "elastic": srigid.get("elastic", {})},
+            "elastic": {
+                "goodput_tok_s": selastic["goodput_tok_s"],
+                "slo_goodput_tok_s": selastic["slo_goodput_tok_s"],
+                "slo_attainment": selastic["slo_attainment"],
+                "preemptions": selastic["preemptions"],
+                "elastic": el},
+            "slo_ratio": slo_ratio}}
+    with open(BENCH_ELASTIC_JSON, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    emit("elastic/pinned", BENCH_ELASTIC_JSON,
+         "STP + SLO goodput, rigid vs elastic, both cells")
+    save_result("elastic_bench", payload)
+
+    # --- the acceptance bars, both STRICT ---------------------------------
+    if elastic["shrunk_spawns"] < 1:
+        raise AssertionError(
+            "no shrunken executor spawn fired in the simulator cell — "
+            "the spill-aware admission path is dead")
+    if elastic["stp"] <= rigid["stp"]:
+        raise AssertionError(
+            f"elastic OURS did not strictly beat rigid OURS on STP "
+            f"under the diurnal+failures stream: {elastic['stp']:.3f} "
+            f"vs {rigid['stp']:.3f}")
+    if el.get("shrunk_joins", 0) < 1:
+        raise AssertionError(
+            "no shrunken join fired in the serving cell — the elastic "
+            "batcher path is dead")
+    if not ev.get("scale_up"):
+        raise AssertionError(
+            "the autoscaler never scaled up under the 7.5x burst — "
+            "the queue-depth trigger is dead")
+    if selastic["slo_goodput_tok_s"] <= srigid["slo_goodput_tok_s"]:
+        raise AssertionError(
+            f"the elastic fleet did not strictly beat the rigid fleet "
+            f"on SLO goodput under burst+failures: "
+            f"{selastic['slo_goodput_tok_s']:.1f} vs "
+            f"{srigid['slo_goodput_tok_s']:.1f} tok/s")
+    return payload
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("REPRO_BENCH_SMOKE", "1")
+    main()

@@ -47,6 +47,7 @@ BENCHES = [
     "tpu_colocation",      # beyond-paper: TPU-jobs universe
     "open_arrivals",       # beyond-paper: Poisson stream, windowed STP
     "serving_bench",       # beyond-paper: continuous vs wave serving
+    "elastic_bench",       # beyond-paper: elastic vs rigid under failures
 ]
 
 

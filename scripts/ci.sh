@@ -152,5 +152,32 @@ if [ -n "$CI_SMOKE_BENCHES" ]; then
     fi
     [ $rc -ne 0 ] && exit $rc
 fi
+
+# Elastic-runtime smoke (repro.sched.elastic): rigid vs elastic OURS
+# under the same diurnal+failure stream on the simulator (strict: the
+# spill-aware shrink admission beats binary admission on STP) and the
+# same burst+failure request stream on the serving engine (strict:
+# shallow shrunken joins + autoscale beat the rigid fleet on SLO
+# goodput; the autoscaler must actually fire).  Emits
+# BENCH_elastic.json.  Same hard wall cap.
+if [ -n "$CI_SMOKE_BENCHES" ]; then
+    REMAIN_S=$(( CI_TIMEOUT_S - (SECONDS - START_S) ))
+    if [ "$REMAIN_S" -lt 10 ]; then
+        echo "ci: FAILED — no budget left for the elastic smoke" \
+             "(${REMAIN_S}s of ${CI_TIMEOUT_S}s)" >&2
+        exit 1
+    fi
+    echo "ci: running elastic-runtime smoke (rigid vs elastic," \
+         "${REMAIN_S}s left)"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        timeout --signal=TERM --kill-after=15 "$REMAIN_S" \
+        "$PYTHON" -m benchmarks.run --smoke --bench elastic_bench \
+        || rc=$?
+    if [ $rc -eq 124 ]; then
+        echo "ci: FAILED — the elastic smoke exceeded the remaining" \
+             "${REMAIN_S}s budget" >&2
+    fi
+    [ $rc -ne 0 ] && exit $rc
+fi
 echo "ci: wall $((SECONDS - START_S))s of ${CI_TIMEOUT_S}s cap"
 exit $rc

@@ -135,6 +135,19 @@ class SimConfig:
     stage_gb_per_item: float = 0.0
     topology_gbps: float = 10.0
     topology_latency_s: float = 0.0
+    # --- elastic runtime (repro.sched.elastic) -------------------------
+    # shrink policy: an ElasticController.  When set, a job whose chunk
+    # does NOT fit a host's budget may run on a FRACTION of its demanded
+    # memory (spilling the rest) at the modeled slowdown from its
+    # estimate's demand-vs-slowdown curve — charged into the executor's
+    # rate, so virtual time pays for the memory cut.  None (default)
+    # keeps binary admission, bit-identical.
+    elastic: Optional[object] = None
+    # deterministic seeded failure injection: a FailureSchedule whose
+    # pre-drawn fail/repair events ride the runtime under its own event
+    # kinds (the legacy Poisson ``failures``/``host_mtbf_s`` channel is
+    # untouched and composable).  None (default) injects nothing.
+    failure_plan: Optional[object] = None
 
     def host_capacity(self) -> ResourceVector:
         """Per-host capacity vector: the primary memory axis, the CPU
@@ -331,7 +344,13 @@ class Simulator:
                 self._push(e.delay_until, "wake", (e, e.version))
 
     def _spawn(self, job: Job, host: Host, items: float, mem_true: float,
-               mem_claimed: float, delay: float = 0.0):
+               mem_claimed: float, delay: float = 0.0,
+               slowdown: float = 1.0, shrink_fraction: float = 1.0):
+        """``slowdown`` > 1 charges a spill-aware shrunken grant into
+        the executor's base rate (virtual time pays for the memory
+        cut); ``shrink_fraction`` < 1 scales the side-car MEMORY-axis
+        bookings by the granted fraction (the primary axis arrives
+        pre-scaled in ``mem_claimed``).  Defaults are exact identities."""
         straggle = 1.0
         if self.cfg.straggler_prob > 0 and \
                 self.rng.random() < self.cfg.straggler_prob:
@@ -352,12 +371,24 @@ class Simulator:
         else:
             aux = job.app.aux_demand
         axes = {a: float(fn(items)) for a, fn in aux.items()}
+        if shrink_fraction != 1.0:
+            from repro.sched.resources import MEMORY_AXES
+            axes = {a: (v * shrink_fraction if a in MEMORY_AXES else v)
+                    for a, v in axes.items()}
         axes[self.cfg.primary_axis] = mem_claimed
         axes["cpu"] = job.app.cpu_load
         e = Executor(next(self._eid), job, host, items, mem_true,
-                     mem_claimed, job.app.rate, self.t,
+                     mem_claimed, job.app.rate / slowdown, self.t,
                      delay_until=self.t + delay, straggle=straggle,
                      claimed_vec=ResourceVector(**axes))
+        if slowdown != 1.0:
+            self.telemetry.inc("elastic.shrink")
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "shrink", self.t, process="cluster", thread="execs",
+                    args={"eid": e.eid, "jid": job.jid, "host": host.hid,
+                          "fraction": shrink_fraction,
+                          "slowdown": slowdown})
         job.unassigned -= items
         job.active += 1
         host.execs.append(e)
@@ -510,6 +541,28 @@ class Simulator:
         host.node.up = True
         self.policy.dispatch(self, [host])
 
+    # --- deterministic failure plan (repro.sched.elastic) ----------------
+    def _fail_host(self, t: float, idx: int) -> None:
+        """FailureSchedule callback: the legacy ``fail`` body minus the
+        Poisson re-arm and the repair push — the schedule owns both, so
+        injecting a deterministic plan never touches the simulator RNG
+        stream (seeded runs with ``failure_plan=None`` stay
+        bit-identical)."""
+        host = self.hosts[idx]
+        if not host.up:
+            return
+        host.up = False
+        host.node.up = False
+        for e in list(host.execs):
+            lost = min(e.done_since_ckpt, e.job.done)
+            e.job.done -= lost
+            self._remove_exec(e, e.items_left + lost)
+
+    def _repair_host(self, t: float, idx: int) -> None:
+        host = self.hosts[idx]
+        if not host.up:
+            self._on_repair(t, host)
+
     def _tick(self, t: float) -> None:
         self.util_trace.append(
             (t, sum(h.cpu_used for h in self.hosts if h.up)
@@ -533,6 +586,10 @@ class Simulator:
             for h in self.hosts:
                 self._push(self.rng.exponential(cfg.host_mtbf_s),
                            "fail", h)
+        if cfg.failure_plan is not None:
+            cfg.failure_plan.attach(
+                self.runtime, on_fail=self._fail_host,
+                on_repair=self._repair_host, n_targets=len(self.hosts))
 
         self.runtime.run(
             max_time=cfg.max_sim_time, tick=self._tick,
@@ -721,14 +778,109 @@ class Policy:
 
     def spawn_params(self, sim, job, host,
                      budget: ResourceVector) -> Optional[Tuple]:
-        """-> (items, mem_true, mem_claimed, delay) or None."""
+        """-> (items, mem_true, mem_claimed, delay) or the 6-tuple
+        (+ slowdown, shrink_fraction) from the spill-aware fallback, or
+        None."""
         n = self._sized_items(sim, job, host, budget)
         if n is None:
-            return None
+            return self._shrink_params(sim, job, host, budget)
         mem_true = job.app.measure(n)
         mem_claimed = self.admission.book(
             job.fn_hat, n, budget.get(sim.cfg.primary_axis, np.inf))
         return n, mem_true, mem_claimed, 0.0
+
+    def _shrink_params(self, sim, job, host,
+                       budget: ResourceVector) -> Optional[Tuple]:
+        """Spill-aware fallback when the chunk does NOT fit: walk the
+        job's demand-vs-slowdown curve to the largest memory fraction
+        the budget covers and, if the ElasticController prices it under
+        the slowdown cap, grant the FULL chunk on the shrunken claim —
+        the executor runs at ``rate / slowdown`` (spilled items re-read
+        from disk cost time, not correctness).  Returns the extended
+        spawn tuple or None (= today's wait)."""
+        cfg = sim.cfg
+        est = job.demand_est
+        curve = getattr(est, "shrink", None) if est is not None else None
+        if cfg.elastic is None or curve is None or not curve.shrinkable:
+            return None
+        if est.model.primary_axis != cfg.primary_axis:
+            return None          # admitted on declared curves — no fit
+        chunk = min(job.unassigned,
+                    job.items / (cfg.n_hosts * cfg.tasks_per_slot))
+        if chunk <= 1e-9:
+            return None
+        dec = self.admission.shrink_target(
+            self._demand_model(cfg, job), budget, units=chunk,
+            curve=curve, elastic=cfg.elastic, book=False)
+        if not dec:
+            return None
+        sh = dec.info["shrink"]
+        f, slow = float(sh["fraction"]), float(sh["slowdown"])
+        if f >= 1.0 - 1e-12:
+            # fits outright — _sized_items already declined (floor);
+            # shrinking must not become a floor bypass
+            return None
+        host.node.record_binding(sh["axis"] or "cap")
+        # the executor genuinely caps its resident set at the granted
+        # fraction (the rest spills) — mis-prediction still bites: if
+        # the true working set overshoots the predicted one, f * true
+        # overshoots the claim and paging/OOM consequences apply
+        mem_true = f * job.app.measure(chunk)
+        mem_claimed = min(
+            f * float(job.fn_hat(chunk)),
+            budget.get(cfg.primary_axis, np.inf))
+        return chunk, mem_true, mem_claimed, 0.0, slow, f
+
+    def _tenant_order(self, sim: Simulator, jobs: List[Job]) -> List[Job]:
+        """Progressive-filling DRF interleave across tenants for the
+        host-scan loop (the serving side's ``pack_step`` analogue):
+        repeatedly hand the scan slot to the tenant with the LOWEST
+        dominant share of booked cluster capacity — live executor
+        claims plus the primary-axis chunks already granted this pass —
+        taking that tenant's first placement-ordered job.  Equal-weight
+        DRF; jobs without a tenant form their own pseudo-tenant.  Only
+        reached when some ready job carries a tenant, so untenanted
+        runs stay bit-identical."""
+        cfg = sim.cfg
+        total = {a: v * cfg.n_hosts
+                 for a, v in cfg.host_capacity().items()}
+        usage: Dict[Optional[str], Dict[str, float]] = {}
+        for h in sim.hosts:
+            for e in h.execs:
+                if e.claimed_vec is None:
+                    continue
+                u = usage.setdefault(e.job.tenant, {})
+                for a, v in e.claimed_vec.items():
+                    u[a] = u.get(a, 0.0) + v
+
+        def share(ten) -> float:
+            return max((v / total[a]
+                        for a, v in usage.get(ten, {}).items()
+                        if total.get(a, 0.0) > 0.0), default=0.0)
+
+        queues: Dict[Optional[str], List[Job]] = {}
+        order: List[Optional[str]] = []   # first-seen tie-break
+        for j in jobs:
+            if j.tenant not in queues:
+                queues[j.tenant] = []
+                order.append(j.tenant)
+            queues[j.tenant].append(j)
+        out: List[Job] = []
+        while any(queues[t] for t in order):
+            pick = min((t for t in order if queues[t]),
+                       key=lambda t: (share(t), order.index(t)))
+            job = queues[pick].pop(0)
+            out.append(job)
+            # charge the job's likely next grant (one primary-axis
+            # chunk) so the NEXT slot goes to whoever is now behind —
+            # this is what interleaves instead of draining one tenant
+            chunk = min(job.unassigned,
+                        job.items / (cfg.n_hosts * cfg.tasks_per_slot))
+            if job.fn_hat is not None:
+                u = usage.setdefault(pick, {})
+                a = cfg.primary_axis
+                u[a] = u.get(a, 0.0) + float(job.fn_hat(chunk))
+        return out
 
     def dispatch(self, sim: Simulator, hosts=None):
         """Offer capacity to jobs in placement order. ``hosts`` narrows
@@ -740,7 +892,10 @@ class Policy:
         placement = self._placement(cfg)
         ready = [j for j in sim.jobs
                  if j.fn_hat is not None and j.unassigned > 1e-9]
-        for job in placement.order_jobs(ready, now=sim.t):
+        ordered = placement.order_jobs(ready, now=sim.t)
+        if any(j.tenant is not None for j in ordered):
+            ordered = self._tenant_order(sim, ordered)
+        for job in ordered:
             for host in placement.order_hosts(job, hosts,
                                               cfg.primary_axis):
                 if not host.up or job.unassigned <= 1e-9:
@@ -762,8 +917,13 @@ class Policy:
                 params = self.spawn_params(sim, job, host, budget)
                 if params is None:
                     continue
-                n, mt, mc, delay = params
-                sim._spawn(job, host, n, mt, mc, delay)
+                n, mt, mc, delay = params[:4]
+                if len(params) > 4:      # spill-aware shrunken grant
+                    sim._spawn(job, host, n, mt, mc, delay,
+                               slowdown=params[4],
+                               shrink_fraction=params[5])
+                else:
+                    sim._spawn(job, host, n, mt, mc, delay)
 
 
 class OursPolicy(Policy):

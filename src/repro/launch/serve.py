@@ -73,8 +73,9 @@ import time
 import numpy as np
 
 from repro.configs import get_config
-from repro.sched import (ModelTarget, ResourceVector, Tenant,
-                         TenantRegistry, available_placements,
+from repro.sched import (Autoscaler, ElasticController,
+                         FailureSchedule, ModelTarget, ResourceVector,
+                         Tenant, TenantRegistry, available_placements,
                          available_routers, available_topologies,
                          get_estimator, get_topology)
 from repro.serve import (Engine, JaxBackend, PagedJaxBackend, Request,
@@ -201,6 +202,37 @@ def main():
                          "with --router drf), and a per-tenant summary "
                          "table prints at exit; '' = untenanted "
                          "(bit-identical legacy schedules)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="spill-aware shrunken joins: a request that "
+                         "does not fit may be admitted at a memory "
+                         "fraction its demand-vs-slowdown curve prices "
+                         "under --elastic-max-slowdown (the spilled "
+                         "remainder is paid as decode-step slowdown); "
+                         "off = bit-identical legacy admission")
+    ap.add_argument("--elastic-max-slowdown", type=float, default=2.5,
+                    help="largest modeled slowdown a shrunken "
+                         "admission may pay (the ElasticController "
+                         "cap)")
+    ap.add_argument("--failures", type=float, default=0.0,
+                    help="inject deterministic replica failures with "
+                         "this mean-time-between-failures in virtual "
+                         "seconds (0 = off); failed replicas drain "
+                         "through migrate-vs-recompute and repair "
+                         "after --repair-s")
+    ap.add_argument("--repair-s", type=float, default=1.0,
+                    help="virtual seconds a failed replica stays down")
+    ap.add_argument("--failure-horizon-s", type=float, default=30.0,
+                    help="failures are drawn on [0, horizon) virtual "
+                         "seconds")
+    ap.add_argument("--autoscale", type=int, default=0,
+                    help="autoscale the fleet up to this many replicas "
+                         "from queue-depth and SLO-attainment trends "
+                         "(0 = off; spares above --replicas are "
+                         "pre-provisioned down and spawned "
+                         "topology-aware)")
+    ap.add_argument("--autoscale-interval-s", type=float, default=0.25,
+                    help="autoscaler observation cadence in virtual "
+                         "seconds")
     ap.add_argument("--trace", default="",
                     help="write a Chrome/Perfetto trace_event JSON of "
                          "the run to this path (virtual-clock spans: "
@@ -233,18 +265,46 @@ def main():
         budget_axes["net"] = float(args.net_gbps)
     budget = ResourceVector(**budget_axes)
 
+    elastic = ElasticController(
+        max_slowdown=args.elastic_max_slowdown) if args.elastic \
+        else None
+    failures = None
+    if args.failures > 0.0:
+        if args.mode != "continuous":
+            ap.error("--failures needs --mode continuous")
+        failures = FailureSchedule.poisson(
+            seed=args.seed, mtbf_s=args.failures,
+            n_targets=args.replicas,
+            horizon_s=args.failure_horizon_s,
+            repair_s=args.repair_s)
+    autoscaler = None
+    fleet = args.replicas
+    if args.autoscale > 0:
+        if args.mode != "continuous":
+            ap.error("--autoscale needs --mode continuous")
+        if args.autoscale < args.replicas:
+            ap.error(f"--autoscale {args.autoscale} is below "
+                     f"--replicas {args.replicas}")
+        autoscaler = Autoscaler(max_replicas=args.autoscale,
+                                min_replicas=args.replicas,
+                                interval_s=args.autoscale_interval_s)
+        # the whole elastic fleet is pre-provisioned: spares idle as
+        # down Nodes (and topology racks) until a scale-up flips one
+        fleet = args.autoscale
+
     budgets = None
     if args.replica_hbm:
         hbm = [float(v) for v in args.replica_hbm.split(",")]
-        if len(hbm) != args.replicas:
-            ap.error(f"--replica-hbm lists {len(hbm)} values for "
-                     f"--replicas {args.replicas}")
+        if len(hbm) != fleet:
+            ap.error(f"--replica-hbm lists {len(hbm)} values for a "
+                     f"fleet of {fleet} (--replicas, or --autoscale "
+                     f"when set)")
         budgets = [ResourceVector(**{**budget_axes, "hbm": h})
                    for h in hbm]
 
     topology = None
     if args.topology:
-        topology = get_topology(args.topology, nodes=args.replicas)
+        topology = get_topology(args.topology, nodes=fleet)
     elif args.migrate:
         ap.error("--migrate needs --topology")
 
@@ -266,10 +326,10 @@ def main():
                                     page_size=page_size,
                                     prefill_chunk=args.prefill_chunk,
                                     seed=args.seed + r)
-                    for r in range(args.replicas)]
+                    for r in range(fleet)]
     else:
         backends = [JaxBackend(cfg, max_len=max_len, seed=args.seed + r)
-                    for r in range(args.replicas)]
+                    for r in range(fleet)]
     tracer = None
     if args.trace:
         from repro.obs import Tracer
@@ -280,7 +340,9 @@ def main():
                     backends=backends, topology=topology,
                     migrate=args.migrate,
                     ingress_gb_per_token=args.ingress_gb_per_token,
-                    budgets=budgets, tracer=tracer, tenants=tenancy)
+                    budgets=budgets, tracer=tracer, tenants=tenancy,
+                    elastic=elastic, failures=failures,
+                    autoscaler=autoscaler)
 
     axes = ", ".join(
         f"{a}={v:.3g}" + ("Gbps" if a == "net" else "GB")
@@ -303,6 +365,19 @@ def main():
         specs = " ".join(f"{t.name}:{t.weight:g}" for t in tenant_list)
         print(f"tenancy [{specs}] (credit-scored weighted-DRF; "
               f"router={args.router!r})")
+    if elastic is not None or failures is not None \
+            or autoscaler is not None:
+        bits = []
+        if elastic is not None:
+            bits.append(f"shrink cap x{args.elastic_max_slowdown:g}")
+        if failures is not None:
+            bits.append(f"failures mtbf={args.failures:g}s "
+                        f"({len(failures.failures)} drawn, "
+                        f"repair {args.repair_s:g}s)")
+        if autoscaler is not None:
+            bits.append(f"autoscale {args.replicas}->{args.autoscale} "
+                        f"(every {args.autoscale_interval_s:g}s)")
+        print(f"elastic runtime: {', '.join(bits)}")
     t0 = time.time()
     summary = engine.run()
     wall = time.time() - t0
@@ -334,6 +409,12 @@ def main():
                   f"{st['goodput_tok_s']:>8.1f} "
                   f"{st['slo_attainment']:>6.2f} "
                   f"{st['dominant_share_mean']:>7.3f} {rej:>8}")
+    if summary.get("elastic"):
+        el = summary["elastic"]
+        ev = " ".join(f"{k}:{n}" for k, n in
+                      sorted(el["replica_events"].items())) or "-"
+        print(f"elastic: {el['shrunk_joins']} shrunken join(s), "
+              f"replica events [{ev}]")
     if tracer is not None:
         tracer.dump(args.trace)
         print(f"trace: {len(tracer)} events -> {args.trace} "

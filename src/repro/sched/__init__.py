@@ -57,6 +57,13 @@ the serving driver (``launch/serve.py``):
 * ``online``     — :class:`OnlineRefresher`: folds newly profiled
   arrivals back into a fitted :class:`~repro.core.predictor.MoEPredictor`
   (KNN append + scaler-bound widening) without a refit.
+* ``elastic``    — the elastic runtime: :class:`SlowdownCurve`
+  (demand-vs-slowdown, fit from spill-model probes), the
+  :class:`ElasticController` shrink-vs-wait-vs-reject policy behind
+  ``AdmissionController.shrink_target``, deterministic
+  :class:`FailureSchedule` fail/repair injection, and the
+  queue/SLO-trend :class:`Autoscaler` with topology-aware spawn
+  placement (:func:`pick_spawn_node`).
 """
 from repro.sched.resources import (  # noqa: F401
     AXES,
@@ -118,5 +125,15 @@ from repro.sched.tenancy import (  # noqa: F401
     WeightedDRFRouter,
     pack_step,
     request_origin,
+)
+from repro.sched.elastic import (  # noqa: F401
+    Autoscaler,
+    ElasticController,
+    ElasticDecision,
+    FailureSchedule,
+    SlowdownCurve,
+    fit_slowdown_curve,
+    pick_spawn_node,
+    shrink_vector,
 )
 from repro.sched.online import OnlineRefresher  # noqa: F401

@@ -305,6 +305,87 @@ class AdmissionController:
         return AdmissionDecision(units, mem, budget_gb, dm.primary_fn,
                                  dict(info or {}), binding, booked, bv)
 
+    def shrink_target(self, demand: Union[MemoryFunction, DemandModel],
+                      budget: Union[float, ResourceVector], *,
+                      units: float, curve, elastic,
+                      book: bool = True,
+                      info: Optional[Dict] = None) -> AdmissionDecision:
+        """Spill-aware shrink admission: when ``units`` of work does NOT
+        fit ``budget`` outright, walk the binding memory axis down to
+        the largest demand **fraction** that fits, price that fraction
+        on the workload's demand-vs-slowdown ``curve``
+        (:class:`~repro.sched.elastic.SlowdownCurve`), and let
+        ``elastic`` (:class:`~repro.sched.elastic.ElasticController`)
+        decide shrink-vs-wait-vs-reject.
+
+        On **shrink** the decision books the shrunken vector — memory
+        axes scaled by the granted fraction, average-rate axes (cpu,
+        net) unscaled — and carries ``info["shrink"] = {fraction,
+        slowdown, axis}``; THE CALLER must charge the slowdown into
+        virtual time (executor rate, decode-step cost): a shrunken
+        grant runs on less memory by paying time, never silently.  On
+        **wait**/**reject** the zero-unit decision carries the usual
+        structured ``info["reject"]`` plus ``info["elastic"]`` with the
+        verdict, so telemetry can tell "priced too high" from "would
+        not fit at any price"."""
+        from repro.sched.elastic import ElasticDecision, shrink_vector
+        dm, bv = self._normalize(demand, budget)
+        primary = dm.primary_axis
+        budget_gb = float(bv.get(primary, np.inf))
+        units = float(units)
+        info_d = dict(info or {})
+        need = dm.demand(units)
+
+        def _zero(verdict: ElasticDecision, axis, fraction: float
+                  ) -> AdmissionDecision:
+            deficit = {a: float(v - bv[a]) for a, v in need.items()
+                       if a in bv and v > bv[a] + 1e-12}
+            info_d["elastic"] = {"action": verdict.action,
+                                 "fraction": float(fraction),
+                                 "slowdown": float(verdict.slowdown)}
+            info_d["reject"] = {
+                "axis": axis, "units": 0.0, "floor": units,
+                "deficit": deficit,
+                "origin": info_d.get("origin", "new"),
+            }
+            return AdmissionDecision(0.0, 0.0, budget_gb, dm.primary_fn,
+                                     info_d, axis, None, bv)
+
+        # average-rate axes don't shrink: if cpu / link demand already
+        # exceeds its budget, no memory cut helps
+        for a, v in need.items():
+            if a not in MEMORY_AXES and a in bv and v > bv[a] + 1e-12:
+                return _zero(ElasticDecision("wait", 0.0, float("inf")),
+                             a, 0.0)
+        # largest memory fraction that fits = min over budgeted memory
+        # axes of budget/demand; the argmin is the binding axis the
+        # curve is walked down
+        fraction, binding = 1.0, None
+        for a, v in need.items():
+            if a in MEMORY_AXES and a in bv and v > 1e-12:
+                r = float(bv[a]) / float(v)
+                if r < fraction:
+                    fraction, binding = r, a
+        verdict = elastic.decide(curve, fraction)
+        if verdict.action != "shrink":
+            return _zero(verdict, binding, fraction)
+        if book:
+            # scale the RAW demand by the granted fraction, THEN clamp
+            # to the budget (shrink_vector on a pre-clamped booking
+            # would double-shrink the binding axis)
+            booked = shrink_vector(need, verdict.fraction)
+            booked = ResourceVector(**{
+                a: (min(v, bv[a]) if a in bv else v)
+                for a, v in booked.items()})
+            mem = booked.get(primary, 0.0)
+        else:
+            booked, mem = None, 0.0
+        info_d["shrink"] = {"fraction": float(verdict.fraction),
+                            "slowdown": float(verdict.slowdown),
+                            "axis": binding}
+        return AdmissionDecision(units, mem, budget_gb, dm.primary_fn,
+                                 info_d, binding, booked, bv)
+
     def book(self, fn: MemoryFunction, units: float,
              budget_gb: float) -> float:
         """Primary-axis memory to reserve for ``units``: the predicted

@@ -58,6 +58,7 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Type, U
 import numpy as np
 
 from repro.core import experts
+from repro.sched.elastic import SlowdownCurve, fit_slowdown_curve
 from repro.core.experts import MemoryFunction
 from repro.sched.resources import DemandModel
 
@@ -114,6 +115,11 @@ class DemandEstimate:
     confidence: Dict[str, float] = field(default_factory=dict)  # per axis
     conservative: bool = False
     info: Dict = field(default_factory=dict)
+    #: demand-vs-slowdown trade-off along the primary memory axis
+    #: (spill-aware shrink admission).  ``None`` or the flat curve both
+    #: mean "not shrinkable" — the conservative fallback; estimators fit
+    #: it from the same probes the demand curve came from.
+    shrink: Optional[SlowdownCurve] = None
 
     @property
     def primary_fn(self) -> Optional[MemoryFunction]:
@@ -324,7 +330,12 @@ def _job_estimate(primary_fn: MemoryFunction, target: JobTarget,
         info = {**info, "aux_calib": aux_calib,
                 "aux_families": {a: fn.family for a, fn in aux.items()}}
     model = DemandModel(curves, primary_axis=target.primary_axis)
-    return DemandEstimate(model, conf, conservative, info)
+    # the demand-vs-slowdown curve rides the SAME calibrated primary
+    # fit (no extra probes, no RNG draws); a conservative estimate is
+    # never shrinkable — flat curve
+    shrink = (SlowdownCurve.flat() if conservative
+              else fit_slowdown_curve(primary_fn, target.units))
+    return DemandEstimate(model, conf, conservative, info, shrink=shrink)
 
 
 # ---------------------------------------------------------------------------
@@ -436,8 +447,14 @@ def _model_estimate(target: ModelTarget, *, pad: float = 1.0,
             "page_size": int(getattr(target, "page_size", 1))}
     if net_info is not None:
         info["net_measured"] = net_info
+    # serving shrink: a request can join on a fraction of its KV
+    # reservation, paying recompute/spill overhead per decode step —
+    # the weights intercept is not shrinkable, so the declared linear
+    # price covers only the growing KV share.  Conservative -> flat.
+    shrink = (SlowdownCurve.flat() if conservative
+              else SlowdownCurve.linear(1.6, min_fraction=0.5))
     return DemandEstimate(DemandModel(curves, primary_axis="hbm"),
-                          conf, conservative, info)
+                          conf, conservative, info, shrink=shrink)
 
 
 # ---------------------------------------------------------------------------
@@ -516,7 +533,9 @@ class OracleEstimator(DemandEstimator):
         conf = {a: 1.0 for a in curves}
         model = DemandModel(curves, primary_axis=target.primary_axis)
         return DemandEstimate(model, conf, False,
-                              {"family": app.family, "oracle": True})
+                              {"family": app.family, "oracle": True},
+                              shrink=fit_slowdown_curve(app.true_fn,
+                                                        target.units))
 
 
 @register_estimator("single-family")

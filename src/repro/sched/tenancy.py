@@ -67,15 +67,55 @@ _EPS = 1e-12
 UNTENANTED = None
 
 
+def _ew(samples: Sequence[Tuple[float, float]], halflife: float):
+    """Exponential-decay weights for timestamped ``(t, value)`` samples:
+    weight halves every ``halflife`` virtual seconds behind the newest
+    sample."""
+    ts = np.asarray([s[0] for s in samples], float)
+    vs = np.asarray([float(s[1]) for s in samples], float)
+    w = 0.5 ** ((ts.max() - ts) / max(halflife, _EPS))
+    return w, vs
+
+
+def _ew_mean(samples, halflife: float) -> float:
+    w, v = _ew(samples, halflife)
+    return float(np.sum(w * v) / max(np.sum(w), _EPS))
+
+
+def _ew_sum(samples, halflife: float) -> float:
+    w, v = _ew(samples, halflife)
+    return float(np.sum(w * v))
+
+
+def _ew_percentile(samples, halflife: float, q: float) -> float:
+    """Weighted percentile: the smallest value whose cumulative decay
+    weight reaches ``q`` percent of the total."""
+    w, v = _ew(samples, halflife)
+    order = np.argsort(v, kind="stable")
+    v, w = v[order], w[order]
+    cum = np.cumsum(w) / max(float(np.sum(w)), _EPS)
+    idx = int(np.searchsorted(cum, q / 100.0, side="left"))
+    return float(v[min(idx, len(v) - 1)])
+
+
 @dataclass(frozen=True)
 class Tenant:
     """Provisioned identity: the name requests carry, the fair-share
     ``weight`` operators assign, and the ``error_budget`` — the SLO miss
     fraction the tenant is allowed before its credit starts paying for
-    it (SRE-style: 0.1 = one miss in ten is tolerated)."""
+    it (SRE-style: 0.1 = one miss in ten is tolerated).
+
+    ``credit_halflife_s`` switches the tenant's credit signals from the
+    registry's hard sliding window (a sample counts fully for
+    ``window`` events, then vanishes off a cliff) to an exponential
+    decay in virtual time: a sample's influence halves every
+    ``credit_halflife_s`` seconds, so one bad burst fades smoothly
+    instead of dominating the score until it ages out all at once.
+    ``None`` (the default) keeps the window behaviour bit-identical."""
     name: str
     weight: float = 1.0
     error_budget: float = 0.1
+    credit_halflife_s: Optional[float] = None
 
     def __post_init__(self):
         if self.weight <= 0.0:
@@ -84,6 +124,11 @@ class Tenant:
         if not 0.0 <= self.error_budget <= 1.0:
             raise ValueError(f"tenant {self.name!r}: error_budget must "
                              f"be in [0, 1], got {self.error_budget}")
+        if self.credit_halflife_s is not None \
+                and self.credit_halflife_s <= 0.0:
+            raise ValueError(f"tenant {self.name!r}: credit_halflife_s "
+                             f"must be > 0, "
+                             f"got {self.credit_halflife_s}")
 
 
 class TenantRegistry:
@@ -112,6 +157,11 @@ class TenantRegistry:
         self.rejects: Dict[Optional[str], Dict[str, int]] = {}
         # usage ledger: tenant -> node id -> booked vector
         self._usage: Dict[Optional[str], Dict[int, ResourceVector]] = {}
+        #: the registry's virtual clock — the max ``now`` any observe
+        #: hook has seen.  Half-life tenants stamp their samples with
+        #: it; untimed observations reuse the current value (all-equal
+        #: stamps degrade the decay to the plain window mean).
+        self._clock = 0.0
         for t in tenants:
             self.add(t)
 
@@ -148,46 +198,74 @@ class TenantRegistry:
             store[name] = deque(maxlen=self.window)
         return store[name]
 
-    def observe_slo(self, name: Optional[str], ok: bool) -> None:
+    def _stamp(self, now: Optional[float]) -> float:
+        if now is not None:
+            self._clock = max(self._clock, float(now))
+        return self._clock
+
+    def _halflife(self, name: Optional[str]) -> Optional[float]:
+        return self.get(name).credit_halflife_s
+
+    def _observe(self, store: Dict, name: Optional[str], value,
+                 now: Optional[float]) -> None:
+        """Append one signal sample: raw value for window tenants
+        (bit-identical to the pre-halflife registry), ``(t, value)``
+        for half-life tenants.  The window still caps sample COUNT
+        either way; the half-life only reweights what is inside it."""
+        t = self._stamp(now)
+        win = self._win(store, name)
+        if self._halflife(name) is not None:
+            win.append((t, value))
+        else:
+            win.append(value)
+
+    def observe_slo(self, name: Optional[str], ok: bool,
+                    now: Optional[float] = None) -> None:
         """One finished request's SLO verdict (both deadlines held)."""
-        self._win(self._slo, name).append(bool(ok))
+        self._observe(self._slo, name, bool(ok), now)
 
     def observe_latency_ratio(self, name: Optional[str],
-                              ratio: float) -> None:
+                              ratio: float,
+                              now: Optional[float] = None) -> None:
         """One observed-latency / target ratio sample (TTFT over its
         deadline); the window's p99 feeds the latency score."""
-        self._win(self._lat_ratio, name).append(float(ratio))
+        self._observe(self._lat_ratio, name, float(ratio), now)
 
     def observe_reject(self, name: Optional[str],
-                       origin: str = "new") -> None:
+                       origin: str = "new",
+                       now: Optional[float] = None) -> None:
         """One structured join reject.  Only ``origin == "new"`` counts
         toward the demand-prediction score — a requeued (preempted)
         request bouncing off admission is scheduler churn, not the
         tenant mis-declaring its demand."""
         by = self.rejects.setdefault(name, {})
         by[origin] = by.get(origin, 0) + 1
-        self._win(self._fresh_rejects, name).append(origin == "new")
+        self._observe(self._fresh_rejects, name, origin == "new", now)
 
     def observe_request(self, req) -> None:
         """Convenience hook for the engine's retire path: fold one
         finished :class:`~repro.serve.request.Request` into the SLO and
-        latency windows."""
-        self.observe_slo(req.tenant, req.meets_slo())
+        latency windows (stamped at its finish time, which is what the
+        half-life decays against)."""
+        self.observe_slo(req.tenant, req.meets_slo(), now=req.finish_t)
         if req.ttft_deadline is not None \
                 and req.first_token_t is not None:
             self.observe_latency_ratio(
                 req.tenant,
-                (req.first_token_t - req.arrival) / req.ttft_deadline)
+                (req.first_token_t - req.arrival) / req.ttft_deadline,
+                now=req.finish_t)
 
     # --- credit -----------------------------------------------------------
     def credit(self, name: Optional[str]) -> float:
         """The live credit score in ``[min_credit, 1]`` — the mean of
         the signal scores that have data (see the module docstring for
         the formula).  A tenant with no history has full credit."""
+        hl = self._halflife(name)
         scores: List[float] = []
         slo = self._slo.get(name)
         if slo:
-            attain = sum(slo) / len(slo)
+            attain = _ew_mean(slo, hl) if hl is not None \
+                else sum(slo) / len(slo)
             scores.append(attain)
             budget = self.get(name).error_budget
             miss = 1.0 - attain
@@ -196,11 +274,12 @@ class TenantRegistry:
                                                 else 0.0))
         lat = self._lat_ratio.get(name)
         if lat:
-            p99 = float(np.percentile(np.asarray(lat, float), 99))
+            p99 = _ew_percentile(lat, hl, 99) if hl is not None \
+                else float(np.percentile(np.asarray(lat, float), 99))
             scores.append(min(max(1.0 / max(p99, _EPS), 0.0), 1.0))
         rej = self._fresh_rejects.get(name)
         if rej:
-            fresh = sum(rej)
+            fresh = _ew_sum(rej, hl) if hl is not None else sum(rej)
             scores.append(1.0 / (1.0 + fresh / float(self.window)))
         if not scores:
             return 1.0
@@ -275,7 +354,9 @@ class TenantRegistry:
             "min_credit": self.min_credit,
             "tenants": [
                 {"name": t.name, "weight": t.weight,
-                 "error_budget": t.error_budget}
+                 "error_budget": t.error_budget,
+                 **({"credit_halflife_s": t.credit_halflife_s}
+                    if t.credit_halflife_s is not None else {})}
                 for k, t in self._tenants.items() if k is not None],
         }
 
@@ -284,7 +365,9 @@ class TenantRegistry:
         return cls([Tenant(name=row["name"],
                            weight=float(row.get("weight", 1.0)),
                            error_budget=float(row.get("error_budget",
-                                                      0.1)))
+                                                      0.1)),
+                           credit_halflife_s=row.get(
+                               "credit_halflife_s"))
                     for row in d.get("tenants", [])],
                    window=int(d.get("window", 64)),
                    min_credit=float(d.get("min_credit", 0.05)))

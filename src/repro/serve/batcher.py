@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.experts import MemoryFunction
 from repro.sched.admission import AdmissionController
+from repro.sched.elastic import shrink_vector
 from repro.sched.placement import PlacementPolicy, get_placement
 from repro.sched.resources import DemandModel, ResourceVector
 from repro.sched.tenancy import (TenantRegistry, pack_step,
@@ -106,6 +107,11 @@ class ServingDemand:
     host_ram_per_req_gb: float = 0.0  # pinned host staging per request
     extra_axes: Dict[str, float] = field(default_factory=dict)
     page_size: int = 1          # KV allocation granularity in tokens
+    #: demand-vs-slowdown curve for spill-aware shrunken joins
+    #: (:class:`~repro.sched.elastic.SlowdownCurve`); None = not
+    #: shrinkable.  ``from_estimate`` carries the estimator's curve
+    #: through; direct constructions opt in explicitly.
+    shrink: Optional[object] = None
 
     def __post_init__(self):
         leaked = sorted(set(self.extra_axes) & set(RESERVED_AXES))
@@ -144,9 +150,11 @@ class ServingDemand:
         ModelTarget(cfg, max_len, ...))``).  The estimator's declared
         page size carries through, so booked demand is quantized the
         way the paged backend actually allocates."""
-        return cls.from_demand_model(
+        sd = cls.from_demand_model(
             estimate.model, max_len,
             page_size=int(estimate.info.get("page_size", 1)))
+        sd.shrink = getattr(estimate, "shrink", None)
+        return sd
 
     def kv_gb(self, tokens: int) -> float:
         """KV footprint of ``tokens`` context tokens, rounded up to the
@@ -216,6 +224,12 @@ class StepDecision:
     rejected_rids: Tuple[int, ...] = ()
     rejected_new: int = 0
     rejected_requeue: int = 0
+    #: spill-aware shrunken joins this step: ``(rid, fraction,
+    #: slowdown)`` per request admitted below its full memory demand —
+    #: the engine registers these grants (the request keeps the
+    #: fraction until it retires or is evicted) and charges the
+    #: modeled slowdown into the step's decode time
+    shrunk: Tuple[Tuple[int, float, float], ...] = ()
 
     @property
     def over_budget(self) -> bool:
@@ -242,7 +256,8 @@ class ContinuousBatcher:
                  controller: Optional[AdmissionController] = None,
                  placement: Union[str, PlacementPolicy] = "fcfs",
                  max_batch: int = 64, node: int = 0,
-                 tenancy: Optional[TenantRegistry] = None):
+                 tenancy: Optional[TenantRegistry] = None,
+                 elastic: Optional[object] = None):
         if "hbm" not in budget:
             raise ValueError("serving budget must carry the hbm axis")
         if budget["hbm"] <= 0:
@@ -260,6 +275,31 @@ class ContinuousBatcher:
         #: None (the default) keeps the legacy FIFO-prefix plan
         #: bit-identical
         self.tenancy = tenancy
+        #: an :class:`~repro.sched.elastic.ElasticController` enables
+        #: spill-aware shrunken joins on the legacy FIFO path: a
+        #: declined candidate may be admitted at a memory fraction the
+        #: demand's shrink curve prices under the slowdown cap.  None
+        #: (the default) keeps every plan bit-identical.
+        self.elastic = elastic
+        #: live shrink grants — rid -> (fraction, slowdown, granted
+        #: vector).  The granted vector is FROZEN at admission: as the
+        #: request's context grows, it spills more (the modeled
+        #: slowdown already paid for spill) instead of pressuring the
+        #: budget — a growing grant sized to exact headroom would be
+        #: evicted the very next step.  Owned by this batcher but
+        #: MUTATED by the engine: grants from a plan's ``shrunk`` tuple
+        #: are registered on apply (see ``register_shrunk``) and
+        #: dropped on eviction / retirement / replica failure.
+        self.shrunk: Dict[int, Tuple[float, float, ResourceVector]] = {}
+
+    def register_shrunk(self, req: Request, fraction: float,
+                        slowdown: float) -> None:
+        """Freeze a plan's shrink grant: book ``fraction`` x the join
+        vector at the admission-time context for as long as the request
+        runs.  Called by the engine when applying a plan."""
+        self.shrunk[req.rid] = (float(fraction), float(slowdown),
+                                shrink_vector(self._join_vector(req),
+                                              float(fraction)))
 
     # --- planning ---------------------------------------------------------
     def plan_step(self, running: Sequence[Request],
@@ -283,7 +323,7 @@ class ContinuousBatcher:
         # usage shrinks.
         victims = list(reversed(self.placement.order_jobs(running,
                                                           now=now)))
-        while running and not self.demand.booked(running, 1).fits(
+        while running and not self._booked(running, 1).fits(
                 self.budget):
             if len(running) == 1:
                 # the progress floor: one request runs even over budget
@@ -305,6 +345,7 @@ class ContinuousBatcher:
         rejected_rids: Tuple[int, ...] = ()
         rejected_new = 0
         rejected_requeue = 0
+        shrunk_new: List[Tuple[int, float, float]] = []
         slots = self.max_batch - len(running)
         # running and pending are disjoint by contract (a victim is only
         # requeued AFTER the plan is applied), so a just-evicted request
@@ -320,7 +361,7 @@ class ContinuousBatcher:
             cands = list(pending)[:slots] if slots > 0 else []
         if cands and not forced and self.tenancy is not None:
             headroom = self.budget.headroom(
-                self.demand.booked(running, 1))
+                self._booked(running, 1))
             usage = self._tenant_usage(running)
             picked, skips = pack_step(
                 self.tenancy, cands, headroom, self.budget, usage,
@@ -352,7 +393,7 @@ class ContinuousBatcher:
                 rejected_requeue = rejected - rejected_new
         elif cands and not forced:
             headroom = self.budget.headroom(
-                self.demand.booked(running, 1))
+                self._booked(running, 1))
             jd = self._join_demand(cands)
             dec = self.controller.admit(
                 jd, headroom, cap=float(len(cands)), book=False)
@@ -370,6 +411,21 @@ class ContinuousBatcher:
                 forced_axes = self._violated(running, 2)
                 forced_rids = (first.rid,)
             rejected = max(len(cands) - len(admitted), 0)
+            if rejected and self.elastic is not None and not forced:
+                # spill-aware second chance: walk the declined suffix
+                # and admit what the shrink curve prices under the
+                # slowdown cap (appends to admitted/running in place).
+                # Room is the PRE-join headroom minus the admitted
+                # prefix's join demand — the inverse charged joiners at
+                # context+2, so charging them through _booked (which
+                # sees them at +1) would overshoot the budget.
+                used = jd.demand(float(len(admitted)))
+                room = ResourceVector(**{
+                    a: max(headroom[a] - used.get(a, 0.0), 0.0)
+                    for a in headroom.axes})
+                shrunk_new = self._shrink_joins(
+                    running, cands[len(admitted):], admitted, room)
+                rejected = len(cands) - len(admitted)
             if rejected:
                 # reject reason: axis and deficit of admitting ONE more
                 # candidate than actually joined, against the headroom
@@ -381,7 +437,8 @@ class ContinuousBatcher:
                 reject_axis = dec.binding_axis or (
                     max(overs, key=overs.get) if overs else None)
                 reject_deficit = overs.get(reject_axis, 0.0)
-                declined = cands[len(admitted):]
+                taken = set(admitted)
+                declined = [r for r in cands if r.rid not in taken]
                 rejected_rids = tuple(r.rid for r in declined)
                 rejected_new = sum(1 for r in declined
                                    if request_origin(r) == "new")
@@ -397,12 +454,23 @@ class ContinuousBatcher:
             rejected_requeue = rejected - rejected_new
 
         # end-of-step footprint: incumbents grow one token; joiners gain
-        # two (the prefill-emitted token plus the decode-step token)
+        # two (the prefill-emitted token plus the decode-step token).
+        # Live shrink grants (and the ones planned just above) book the
+        # granted fraction of the modeled vector.
         joined = set(admitted)
+        newly = {rid: f for rid, f, _ in shrunk_new}
         booked = ResourceVector(hbm=self.demand.weights_gb)
         for r in running:
-            booked = booked + self.demand.request_vector(
-                r, 2 if r.rid in joined else 1)
+            f = newly.get(r.rid)
+            if f is not None:
+                # just granted: the frozen vector the engine will book
+                vec = shrink_vector(self._join_vector(r), f)
+            elif r.rid in self.shrunk:
+                vec = self.shrunk[r.rid][2]
+            else:
+                vec = self.demand.request_vector(
+                    r, 2 if r.rid in joined else 1)
+            booked = booked + vec
         return StepDecision(
             step=step, t=now, admitted=tuple(admitted),
             preempted=tuple(preempted), batch=len(running),
@@ -413,9 +481,69 @@ class ContinuousBatcher:
             reject_deficit=reject_deficit,
             rejected_rids=rejected_rids,
             rejected_new=rejected_new,
-            rejected_requeue=rejected_requeue)
+            rejected_requeue=rejected_requeue,
+            shrunk=tuple(shrunk_new))
 
     # --- helpers ----------------------------------------------------------
+    def _booked(self, running: Sequence[Request], extra_tokens: int
+                ) -> ResourceVector:
+        """Booked footprint honouring live shrink grants: a request
+        admitted at fraction ``f`` occupies ``f`` x its modeled memory
+        (the spilled remainder lives off-budget at the modeled slowdown
+        price).  With no grants outstanding this is exactly the legacy
+        ``demand.booked`` total."""
+        if not self.shrunk:
+            return self.demand.booked(running, extra_tokens)
+        total = ResourceVector(hbm=self.demand.weights_gb)
+        for r in running:
+            fs = self.shrunk.get(r.rid)
+            vec = fs[2] if fs is not None \
+                else self.demand.request_vector(r, extra_tokens)
+            total = total + vec
+        return total
+
+    def _shrink_joins(self, running: List[Request],
+                      declined: Sequence[Request],
+                      admitted: List[int],
+                      headroom: ResourceVector
+                      ) -> List[Tuple[int, float, float]]:
+        """Walk the declined candidates in placement order and admit
+        each at the largest memory fraction the remaining headroom
+        covers, when the demand's shrink curve prices that fraction
+        under the elastic controller's slowdown cap — the serving twin
+        of the simulator's shrunken executors, through the same
+        :meth:`AdmissionController.shrink_target` walk.  Mutates
+        ``running``/``admitted`` in place; returns the ``(rid,
+        fraction, slowdown)`` grants for the engine to register."""
+        curve = getattr(self.demand, "shrink", None)
+        if curve is None or not getattr(curve, "shrinkable", False):
+            return []
+        out: List[Tuple[int, float, float]] = []
+        for r in declined:
+            if len(running) >= self.max_batch:
+                break
+            need = self._join_vector(r)
+            dm = DemandModel(
+                {a: MemoryFunction("affine", 0.0, v)
+                 for a, v in need.items()},
+                primary_axis="hbm")
+            dec = self.controller.shrink_target(
+                dm, headroom, units=1.0, curve=curve,
+                elastic=self.elastic, book=False)
+            sh = dec.info.get("shrink") if dec else None
+            if not dec or sh is None or \
+                    sh["fraction"] >= 1.0 - 1e-12:
+                continue
+            out.append((r.rid, float(sh["fraction"]),
+                        float(sh["slowdown"])))
+            admitted.append(r.rid)
+            running.append(r)
+            grant = shrink_vector(need, float(sh["fraction"]))
+            headroom = ResourceVector(**{
+                a: max(headroom[a] - grant.get(a, 0.0), 0.0)
+                for a in headroom.axes})
+        return out
+
     def _join_demand(self, cands: Sequence[Request]) -> DemandModel:
         """Marginal demand of admitting the first ``u`` ordered
         candidates, as per-axis prefix curves the controller can invert.
@@ -465,6 +593,6 @@ class ContinuousBatcher:
 
     def _violated(self, running: Sequence[Request],
                   extra_tokens: int) -> Tuple[str, ...]:
-        booked = self.demand.booked(running, extra_tokens)
+        booked = self._booked(running, extra_tokens)
         return tuple(a for a, v in booked.items()
                      if a in self.budget and v > self.budget[a] + _EPS)

@@ -56,6 +56,7 @@ from repro.core.experts import MemoryFunction
 from repro.obs.telemetry import sample_node
 from repro.sched.admission import AdmissionController
 from repro.sched.cluster import ClusterRuntime, ClusterState, Node, Router
+from repro.sched.elastic import Autoscaler, pick_spawn_node
 from repro.sched.resources import DemandModel, ResourceVector
 from repro.sched.tenancy import Tenant, TenantRegistry
 from repro.sched.topology import Topology
@@ -100,14 +101,39 @@ class Engine:
                  budgets: Optional[Sequence[ResourceVector]] = None,
                  tracer=None,
                  tenants: Union[TenantRegistry, Sequence[Tenant],
-                                None] = None):
+                                None] = None,
+                 elastic=None,
+                 failures=None,
+                 autoscaler=None):
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r} (choose from {MODES})")
         if not isinstance(budget, ResourceVector):
             budget = ResourceVector(hbm=float(budget))
+        if mode != "continuous" and (elastic is not None
+                                     or failures is not None
+                                     or autoscaler is not None):
+            raise ValueError("elastic / failures / autoscaler run on "
+                             "the continuous engine (wave is the "
+                             "legacy shim)")
         self.replicas = int(replicas)
         if self.replicas < 1:
             raise ValueError("replicas must be >= 1")
+        #: the elastic runtime (all default-off, bit-identical when
+        #: unset): ``elastic`` (ElasticController) turns on spill-aware
+        #: shrunken joins in the batchers; ``failures``
+        #: (FailureSchedule) injects deterministic replica fail/repair
+        #: events; ``autoscaler`` (Autoscaler) spawns/drains replicas
+        #: from queue-depth and SLO-attainment trends.  With an
+        #: autoscaler the fleet is PRE-PROVISIONED to ``max_replicas``
+        #: — the spares exist as down Nodes (no capacity, invisible to
+        #: the router) until a scale-up flips them live.
+        self.elastic = elastic
+        self.failures = failures
+        self.autoscaler = autoscaler
+        self._initial_replicas = self.replicas
+        if autoscaler is not None:
+            self.replicas = max(self.replicas,
+                                int(autoscaler.max_replicas))
         if mode == "wave" and self.replicas != 1:
             raise ValueError("wave mode is the single-replica legacy "
                              "path — use mode='continuous' with "
@@ -171,6 +197,10 @@ class Engine:
         self.budgets = budgets
         for node in cluster:
             node.book(_WEIGHTS_KEY, ResourceVector(hbm=demand.weights_gb))
+        # autoscaler spares start DOWN: routers skip them, no steps run
+        # on them, and a scale-up flips one live
+        for nid in range(self._initial_replicas, self.replicas):
+            cluster[nid].up = False
         #: None (the default) keeps the legacy FIFO-prefix plan and
         #: routing bit-identical; a registry (or plain Tenant list)
         #: turns on weighted-DRF fairness in the router, the batchers'
@@ -197,7 +227,8 @@ class Engine:
             demand, budgets[r] if budgets is not None else budget,
             controller=self.controller,
             placement=self.queue.placement, max_batch=self.max_batch,
-            node=r, tenancy=self.tenancy) for r in range(self.replicas)]
+            node=r, tenancy=self.tenancy,
+            elastic=elastic) for r in range(self.replicas)]
         self.batcher = self.batchers[0]
         self.metrics = ServingMetrics()
         for r in self.requests:
@@ -218,6 +249,11 @@ class Engine:
                             for r in self.requests)
                 chunk_mult = max(chunk_mult, 1 + worst)
         self.max_steps = base_bound * chunk_mult
+        if failures is not None or autoscaler is not None:
+            # fail/repair and scale events add idle wakes and recompute
+            # churn beyond the structural bound; slacken the backstop
+            # (still an assertion against live-lock, not a knob)
+            self.max_steps = self.max_steps * 4 + 256
         # per-replica scheduling state (continuous mode)
         self._pending: List[List[Request]] = \
             [[] for _ in range(self.replicas)]
@@ -235,6 +271,11 @@ class Engine:
             [[] for _ in range(self.replicas)]
         self._kv_ready: set = set()
         self._step_gen: List[int] = [0] * self.replicas
+        #: replicas currently failed (failure injection): their step
+        #: chains die on arrival and repair pushes a fresh one.  A
+        #: scaled-DOWN replica is NOT in here — it keeps stepping until
+        #: its running set drains.
+        self._failed: set = set()
 
     # --- routing ----------------------------------------------------------
     def _route_released(self, now: float) -> None:
@@ -392,6 +433,18 @@ class Engine:
         wire is cheaper than recompute), join/adopt.  Returns the join
         (prefill) cost."""
         running = self._running[ridx]
+        batcher = self.batchers[ridx]
+        # register shrink grants BEFORE joins run: the frozen granted
+        # vector is sized at the plan-time context, and the backend's
+        # join/prefill may advance it
+        for rid, frac, slow in plan.shrunk:
+            batcher.register_shrunk(self._by_rid[rid], frac, slow)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "shrink", now, process=f"replica{ridx}",
+                    thread="events",
+                    args={"rid": rid, "fraction": frac,
+                          "slowdown": slow})
         evicted = [self._by_rid[rid] for rid in plan.preempted]
         if evicted:
             moves = self._plan_migrations(evicted, ridx, now) \
@@ -401,6 +454,7 @@ class Engine:
                 r.preemptions += 1
                 running.remove(r)
                 r.state = RequestState.QUEUED
+                batcher.shrunk.pop(r.rid, None)
                 if r.rid in moves:
                     dst, kv_gb = moves[r.rid]
                     self._start_migration(r, ridx, dst, kv_gb, now)
@@ -440,8 +494,11 @@ class Engine:
                 r.state = RequestState.FINISHED
                 r.finish_t = now
                 running.remove(r)
+                self.batchers[ridx].shrunk.pop(r.rid, None)
                 if self.tenancy is not None:
                     self.tenancy.observe_request(r)
+                if self.autoscaler is not None:
+                    self.autoscaler.observe_finished(r.meets_slo())
                 self._trace_req_end(r, now)
 
     def _trace_req_end(self, r: Request, now: float) -> None:
@@ -474,8 +531,13 @@ class Engine:
             if key != _WEIGHTS_KEY and key not in live:
                 node.release(key)
         by_tenant: Dict[Optional[str], ResourceVector] = {}
+        shrunk = self.batchers[ridx].shrunk
         for rid, r in live.items():
-            vec = self.demand.request_vector(r)
+            fs = shrunk.get(rid)
+            # a live shrink grant books its FROZEN granted vector (the
+            # spilled remainder is off-budget by construction)
+            vec = fs[2] if fs is not None \
+                else self.demand.request_vector(r)
             if rid in node:
                 node.rebook(rid, vec)
             else:
@@ -486,6 +548,122 @@ class Engine:
         if self.tenancy is not None:
             # registry ledger follows the node ledger exactly
             self.tenancy.set_node_usage(ridx, by_tenant)
+
+    # --- elastic runtime: failures and autoscaling ------------------------
+    def _fail_replica(self, t: float, ridx: int) -> None:
+        """Failure injection: the replica goes dark.  Its live requests
+        drain through the existing migrate-vs-recompute path (a
+        controlled drain ships KV when the wire beats recompute;
+        otherwise the request requeues and recomputes), its queued
+        requests re-route to live replicas as requeue-origin work, and
+        its step chain dies until repair."""
+        if ridx in self._failed or ridx >= self.replicas:
+            return
+        self._failed.add(ridx)
+        node = self.runtime.cluster[ridx]
+        node.up = False
+        self.metrics.record_replica_event("fail")
+        running = self._running[ridx]
+        if running:
+            moves = self._plan_migrations(running, ridx, t) \
+                if (self.migrate and self.topology is not None) else {}
+            self.backends[ridx].remove(running)
+            batcher = self.batchers[ridx]
+            for r in list(running):
+                r.preemptions += 1
+                r.state = RequestState.QUEUED
+                batcher.shrunk.pop(r.rid, None)
+                if r.rid in moves:
+                    dst, kv_gb = moves[r.rid]
+                    self._start_migration(r, ridx, dst, kv_gb, t)
+                else:
+                    self._pending[ridx].append(r)
+            running.clear()
+        self._drain_pending(ridx, t)
+        self._sync_node(ridx)
+
+    def _repair_replica(self, t: float, ridx: int) -> None:
+        """The failed replica comes back empty (weights resident, no
+        KV) and re-enters routing; a fresh step chain re-admits
+        whatever parked on it while everything else was down."""
+        if ridx not in self._failed:
+            return
+        self._failed.discard(ridx)
+        self.runtime.cluster[ridx].up = True
+        self.metrics.record_replica_event("repair")
+        self._push_step(max(t, self._clocks[ridx]), ridx)
+
+    def _drain_pending(self, ridx: int, t: float) -> None:
+        """Re-route a down replica's queued requests to live replicas
+        (requeue-origin re-admission: they keep their admission /
+        preemption history).  Routers fall back to down nodes when
+        nothing is up, so a candidate that routes back to a down node
+        parks locally and re-enters service on repair."""
+        stranded = list(self._pending[ridx])
+        if not stranded:
+            return
+        self._pending[ridx] = []
+        woken = set()
+        for req in stranded:
+            vec = self.demand.request_vector(req)
+            node = self.runtime.route(vec, now=t, tenant=req.tenant)
+            if not node.up or node.nid == ridx \
+                    or node.nid in self._failed:
+                self._pending[ridx].append(req)   # nowhere to go
+                continue
+            self._pending[node.nid].append(req)
+            woken.add(node.nid)
+        for nid in sorted(woken):
+            self._sync_node(nid)
+            self._push_step(max(t, self._clocks[nid]), nid)
+
+    def _on_autoscale(self, t: float, _payload) -> Optional[bool]:
+        """One autoscaler tick: observe queue depth and SLO attainment,
+        spawn a spare (topology-aware: the rack with the most ingress
+        uplink headroom) or drain the emptiest autoscaled replica, then
+        re-arm — until no work remains anywhere."""
+        aus = self.autoscaler
+        depth = sum(len(p) for p in self._pending) \
+            + sum(len(x) for x in self._in_transit)
+        busy = any(self._running)
+        if depth == 0 and not busy \
+                and self.queue.next_arrival() is None:
+            return False          # drained for good: stop the re-arm
+        active = [n.nid for n in self.runtime.cluster
+                  if n.up and n.nid not in self._failed]
+        action = aus.observe(t, queue_depth=float(depth),
+                             active=len(active))
+        if action == "up":
+            spares = [n.nid for n in self.runtime.cluster
+                      if not n.up and n.nid not in self._failed]
+            nid = pick_spawn_node(spares, self.topology)
+            if nid is not None:
+                self.runtime.cluster[nid].up = True
+                self.metrics.record_replica_event("scale_up")
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "scale-up", t, process="autoscaler",
+                        thread="events", args={"node": nid})
+                self._push_step(max(t, self._clocks[nid]), nid)
+        elif action == "down":
+            # only autoscaled replicas drain; the base fleet persists
+            cands = [nid for nid in active
+                     if nid >= self._initial_replicas]
+            if cands:
+                nid = min(cands, key=lambda n: (
+                    len(self._running[n]) + len(self._pending[n])
+                    + len(self._in_transit[n]), -n))
+                self.runtime.cluster[nid].up = False
+                self.metrics.record_replica_event("scale_down")
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "scale-down", t, process="autoscaler",
+                        thread="events", args={"node": nid})
+                # queued work re-routes now; running work finishes on
+                # the draining replica (its step chain keeps going)
+                self._drain_pending(nid, t)
+                self._sync_node(nid)
+        self.runtime.push(t + aus.interval_s, Autoscaler.KIND, None)
 
     # --- the loops --------------------------------------------------------
     def run(self) -> Dict:
@@ -504,8 +682,11 @@ class Engine:
         wake a replica that already has a step outstanding, so payloads
         carry a generation and each push supersedes the previous event
         (at most one LIVE step per replica — the same stale-event
-        discipline as the simulator's re-timed finishes)."""
-        if self.topology is None:
+        discipline as the simulator's re-timed finishes).  Failure
+        injection and autoscaling wake replicas the same way (repair,
+        scale-up), so they force generation payloads too."""
+        if self.topology is None and self.failures is None \
+                and self.autoscaler is None:
             self.runtime.push(t, "step", ridx)
         else:
             self._step_gen[ridx] += 1
@@ -521,6 +702,8 @@ class Engine:
                 return False          # superseded by a delivery wake
         else:
             ridx = payload
+        if ridx in self._failed:
+            return False  # failed replica: chain dies; repair re-pushes
         self._route_released(t)
         running = self._running[ridx]
         cands = self._candidates_for(ridx, t)
@@ -539,6 +722,13 @@ class Engine:
                                              self._step_no)
         dt_join = self._apply(plan, ridx, t)
         dt_decode = self.backends[ridx].decode(running)
+        shrunk = self.batchers[ridx].shrunk
+        if shrunk:
+            # a decode step is lockstep across the batch: the slowest
+            # member — the deepest shrink grant, paying its modeled
+            # spill slowdown — sets the step time
+            dt_decode *= max((shrunk[r.rid][1] for r in running
+                              if r.rid in shrunk), default=1.0)
         dt = dt_join + dt_decode
         t_end = t + dt
         self._step_no += 1
@@ -572,7 +762,7 @@ class Engine:
             r = self._by_rid[rid]
             origin = "requeue" if (r.admissions > 0
                                    or r.preemptions > 0) else "new"
-            reg.observe_reject(r.tenant, origin)
+            reg.observe_reject(r.tenant, origin, now=plan.t)
             self.metrics.record_tenant_reject(r.tenant, origin)
         node = self.runtime.cluster[ridx]
         for name in reg.names():
@@ -620,7 +810,18 @@ class Engine:
 
     def _run_continuous(self) -> float:
         self.runtime.on("step", self._on_step)
-        for ridx in range(self.replicas):
+        if self.failures is not None:
+            # failures target the base fleet; autoscaled spares are the
+            # relief capacity
+            self.failures.attach(
+                self.runtime, on_fail=self._fail_replica,
+                on_repair=self._repair_replica,
+                n_targets=self._initial_replicas)
+        if self.autoscaler is not None:
+            self.runtime.on(Autoscaler.KIND, self._on_autoscale)
+            self.runtime.push(self.autoscaler.interval_s,
+                              Autoscaler.KIND, None)
+        for ridx in range(self._initial_replicas):
             self._push_step(0.0, ridx)
         self.runtime.run()
         return max(self._clocks)

@@ -72,6 +72,13 @@ class ServingMetrics:
         #: otherwise, so untenanted summaries stay shape-stable)
         self._tenant_shares: Dict[str, List[float]] = {}
         self._tenant_rejects: Dict[str, Dict[str, int]] = {}
+        #: elastic-runtime accounting (shrink grants, replica
+        #: fail/repair, autoscale up/down).  All zero outside elastic
+        #: runs, and the summary only carries an ``elastic`` section
+        #: when something fired — flags-off summaries stay
+        #: bit-identical to the pre-elastic shape.
+        self._shrunk_joins = 0
+        self._replica_events: Dict[str, int] = {}
 
     # --- recording --------------------------------------------------------
     def record_step(self, dec: StepDecision, dt: float) -> None:
@@ -102,6 +109,9 @@ class ServingMetrics:
                     self.rejects_by_origin["requeue"] = \
                         self.rejects_by_origin.get("requeue", 0) + requeue
         self.node_steps[dec.node] = self.node_steps.get(dec.node, 0) + 1
+        shrunk = getattr(dec, "shrunk", ())
+        if shrunk:
+            self._shrunk_joins += len(shrunk)
 
     def record_request(self, req: Request) -> None:
         self.requests.append(req)
@@ -116,6 +126,12 @@ class ServingMetrics:
         """Attach the topology's end-of-run per-link ledger (busy
         seconds/fraction, GB moved, peak concurrent flows)."""
         self.link_stats = {name: dict(st) for name, st in stats.items()}
+
+    def record_replica_event(self, kind: str) -> None:
+        """One elastic-runtime replica event: ``fail`` / ``repair``
+        (failure injection) or ``scale_up`` / ``scale_down``
+        (autoscaler)."""
+        self._replica_events[kind] = self._replica_events.get(kind, 0) + 1
 
     def record_tenant_share(self, tenant: str, share: float) -> None:
         """One dominant-share sample (usage fraction of the binding
@@ -177,7 +193,7 @@ class ServingMetrics:
                 if shares else 0.0,
                 "rejects": dict(self._tenant_rejects.get(name, {})),
             }
-        return {
+        out = {
             "requests": len(self.requests),
             "completed": len(done),
             "steps": len(self.steps),
@@ -213,6 +229,12 @@ class ServingMetrics:
                       for name, st in self.link_stats.items()},
             "tenants": tenants,
         }
+        if self._shrunk_joins or self._replica_events:
+            out["elastic"] = {
+                "shrunk_joins": self._shrunk_joins,
+                "replica_events": dict(self._replica_events),
+            }
+        return out
 
     def format_summary(self, s: Optional[Dict] = None) -> str:
         s = s or self.summary()

@@ -1,0 +1,663 @@
+"""The elastic runtime (repro/sched/elastic.py) and its consumer seams:
+
+* SlowdownCurve / fit_slowdown_curve — validation, interpolation,
+  the spill-model derivation (slowdown bounded by the disk re-read
+  factor, monotone in the granted fraction), flat-curve fallbacks;
+* ElasticController — the shrink-vs-wait-vs-reject matrix, including
+  the conservative flat curve never volunteering for a cut;
+* AdmissionController.shrink_target — the shrunken booking never
+  exceeds the budget on any axis, ``info["shrink"]`` carries the
+  priced verdict, average-rate axes never shrink;
+* FailureSchedule — seeded determinism, own-RNG isolation, the
+  efail/erepair event ride on a ClusterRuntime with the repair pushed
+  by the fail handler;
+* Autoscaler — sustained-trend scale decisions (one bursty sample
+  never flaps the fleet), streak resets after each action;
+* the simulator seam — an EMPTY failure plan leaves a seeded run
+  bit-identical (attach perturbs no RNG stream), a deterministic plan
+  releases stale claims on fail and re-admits on repair, the legacy
+  Poisson fail/repair channel conserves work, elastic shrink spawns
+  fire and charge their slowdown, tenant-DRF interleaves the scan;
+* the engine seam — flags-off summaries carry no ``elastic`` section,
+  replica fail/drain/repair completes every request, the autoscaler
+  scales up under a burst, shrunken joins book within budget;
+* tenancy half-life — the default window path is bit-identical, decay
+  forgives an old bad burst faster than the hard window.
+"""
+import numpy as np
+import pytest
+
+from repro.core import MoEPredictor, SimConfig, Simulator, \
+    spark_sim_suite, training_apps
+from repro.core.experts import MemoryFunction
+from repro.core.simulator import OursPolicy
+from repro.sched import (AdmissionController, Arrival, Autoscaler,
+                         ElasticController, FailureSchedule,
+                         SlowdownCurve, Tenant, TenantRegistry,
+                         fit_slowdown_curve, get_estimator,
+                         pick_spawn_node, shrink_vector)
+from repro.sched.cluster import ClusterRuntime, ClusterState
+from repro.sched.resources import MEMORY_AXES, ResourceVector
+from repro.serve import Engine, Request, ServingDemand
+from repro.serve.batcher import ContinuousBatcher
+
+
+@pytest.fixture(scope="module")
+def suite():
+    apps = spark_sim_suite()
+    moe = MoEPredictor().fit(training_apps(apps))
+    return apps, moe
+
+
+def spilly(apps):
+    """Slope-dominated apps (sub-GB quarter-chunk floor): the mix
+    where a shrunken memory grant genuinely spills items."""
+    return [a for a in apps if a.measure(0.0625) < 1.0]
+
+
+def make_requests(n, seed=0, rate=20.0, prompt=(8, 24), new=(8, 32),
+                  ttft=0.25, tpot=0.05):
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return [Request(rid=i, prompt_len=int(rng.integers(*prompt)),
+                    max_new_tokens=int(rng.integers(*new)),
+                    arrival=float(t[i]), ttft_deadline=ttft,
+                    tpot_deadline=tpot)
+            for i in range(n)]
+
+
+# --- SlowdownCurve ---------------------------------------------------------
+
+def test_slowdown_curve_validation():
+    with pytest.raises(ValueError):
+        SlowdownCurve(((0.0, 2.0),))          # fraction out of (0, 1]
+    with pytest.raises(ValueError):
+        SlowdownCurve(((1.5, 1.0),))
+    with pytest.raises(ValueError):
+        SlowdownCurve(((0.5, 0.9),))          # slowdown < 1
+    with pytest.raises(ValueError):
+        SlowdownCurve.linear(2.0, min_fraction=1.0)
+    flat = SlowdownCurve.flat()
+    assert not flat.shrinkable
+    assert flat.slowdown_at(1.0) == 1.0
+    assert flat.slowdown_at(0.5) == float("inf")
+    assert SlowdownCurve(()).points == ((1.0, 1.0),)   # empty -> flat
+
+
+def test_slowdown_curve_interpolation():
+    c = SlowdownCurve.linear(3.0, min_fraction=0.5)
+    assert c.shrinkable and c.min_fraction == pytest.approx(0.5)
+    assert c.slowdown_at(1.0) == 1.0
+    assert c.slowdown_at(0.5) == pytest.approx(3.0)
+    assert c.slowdown_at(0.75) == pytest.approx(2.0)   # linear midpoint
+    assert c.slowdown_at(0.49) == float("inf")         # below support
+    assert c.slowdown_at(1.2) == 1.0                   # above full grant
+    # monotone: deeper cut never cheaper
+    fs = np.linspace(0.5, 1.0, 21)
+    ss = [c.slowdown_at(f) for f in fs]
+    assert all(a >= b - 1e-12 for a, b in zip(ss, ss[1:]))
+
+
+def test_fit_slowdown_curve_spill_model():
+    fn = MemoryFunction("affine", 0.5, 0.1)   # 0.5 GB floor + 0.1/item
+    c = fit_slowdown_curve(fn, 100.0, spill_cost=3.0)
+    assert c.shrinkable
+    # the default grid reaches the controller's default min_fraction
+    assert c.min_fraction == pytest.approx(0.25)
+    assert c.slowdown_at(1.0) == 1.0
+    for f in (0.3, 0.5, 0.75, 0.9):
+        s = c.slowdown_at(f)
+        # priced between free and the pure disk re-read factor
+        assert 1.0 <= s <= 3.0 + 1e-9
+    # spill model at f=0.5: in_mem = inverse(0.5 * 10.5) = 47.5 items,
+    # slowdown = (47.5 + 3 * 52.5) / 100
+    assert c.slowdown_at(0.5) == pytest.approx(
+        (47.5 + 3.0 * 52.5) / 100.0, rel=1e-6)
+
+
+def test_fit_slowdown_curve_degenerate_falls_flat():
+    assert not fit_slowdown_curve(
+        MemoryFunction("affine", 0.5, 0.1), 0.0).shrinkable
+    # no inverse on the callable -> not shrinkable
+    assert not fit_slowdown_curve(lambda u: 0.1 * u, 10.0).shrinkable
+
+
+# --- ElasticController -----------------------------------------------------
+
+def test_elastic_controller_validation():
+    with pytest.raises(ValueError):
+        ElasticController(max_slowdown=0.5)
+    with pytest.raises(ValueError):
+        ElasticController(min_fraction=0.0)
+    with pytest.raises(ValueError):
+        ElasticController(min_fraction=1.5)
+
+
+def test_elastic_controller_decision_matrix():
+    ctl = ElasticController(max_slowdown=2.0, min_fraction=0.25)
+    curve = SlowdownCurve.linear(3.0, min_fraction=0.25)
+    # nothing free at all -> reject
+    assert ctl.decide(curve, 0.0).action == "reject"
+    # fits outright -> trivial shrink at full grant, free
+    d = ctl.decide(None, 1.0)
+    assert d.action == "shrink" and d.fraction == 1.0 and d.slowdown == 1.0
+    # flat / missing curve -> wait (conservative fallback never shrinks)
+    assert ctl.decide(None, 0.8).action == "wait"
+    assert ctl.decide(SlowdownCurve.flat(), 0.8).action == "wait"
+    # cut deeper than the controller or curve support -> wait
+    assert ctl.decide(curve, 0.2).action == "wait"
+    # priced over the cap -> wait (linear(3.0): 0.3 costs ~2.87)
+    assert ctl.decide(curve, 0.3).action == "wait"
+    # priced under the cap -> shrink, carrying the charged slowdown
+    d = ctl.decide(curve, 0.8)
+    assert bool(d) and d.action == "shrink"
+    assert d.fraction == pytest.approx(0.8)
+    assert d.slowdown == pytest.approx(curve.slowdown_at(0.8))
+
+
+def test_shrink_vector_memory_axes_only():
+    v = ResourceVector(host_ram=10.0, cpu=0.6, hbm=4.0, net=2.0)
+    s = shrink_vector(v, 0.5)
+    for a in v:
+        if a in MEMORY_AXES:
+            assert s[a] == pytest.approx(0.5 * v[a])
+        else:
+            assert s[a] == pytest.approx(v[a])
+
+
+# --- AdmissionController.shrink_target -------------------------------------
+
+def test_shrink_target_books_within_budget():
+    ctl = AdmissionController(safety_margin=0.0)
+    fn = MemoryFunction("affine", 0.5, 0.1)   # demand(100) = 10.5 GB
+    curve = fit_slowdown_curve(fn, 100.0)
+    elastic = ElasticController(max_slowdown=2.5)
+    info = {}
+    dec = ctl.shrink_target(fn, 6.0, units=100.0, curve=curve,
+                            elastic=elastic, info=info)
+    assert dec.units == pytest.approx(100.0)
+    assert dec.booked is not None and dec.booked.fits(dec.budget)
+    sh = dec.info["shrink"]
+    assert sh["fraction"] == pytest.approx(6.0 / 10.5, rel=1e-6)
+    assert 1.0 < sh["slowdown"] <= 2.5 + 1e-9
+    # book=False plans without reserving
+    dry = ctl.shrink_target(fn, 6.0, units=100.0, curve=curve,
+                            elastic=elastic, book=False)
+    assert dry.booked is None and dry.mem_gb == 0.0
+    assert dry.info["shrink"]["fraction"] == pytest.approx(
+        sh["fraction"])
+
+
+def test_shrink_target_wait_and_rate_axes():
+    ctl = AdmissionController(safety_margin=0.0)
+    fn = MemoryFunction("affine", 0.5, 0.1)
+    elastic = ElasticController(max_slowdown=2.5)
+    # flat curve -> structured wait, zero units
+    dec = ctl.shrink_target(fn, 6.0, units=100.0,
+                            curve=SlowdownCurve.flat(), elastic=elastic)
+    assert dec.units == 0.0 and dec.info["elastic"]["action"] == "wait"
+    assert "reject" in dec.info
+    # an over-budget average-rate axis (cpu) cannot be shrunk away
+    from repro.sched.resources import DemandModel
+    dm = DemandModel(curves={"host_ram": fn}, fixed={"cpu": 2.0})
+    bv = ResourceVector(host_ram=6.0, cpu=1.0)
+    dec = ctl.shrink_target(dm, bv, units=100.0,
+                            curve=fit_slowdown_curve(fn, 100.0),
+                            elastic=elastic)
+    assert dec.units == 0.0
+    assert dec.info["elastic"]["action"] == "wait"
+    assert dec.info["reject"]["axis"] == "cpu"
+
+
+# --- FailureSchedule -------------------------------------------------------
+
+def test_failure_schedule_validation_and_determinism():
+    with pytest.raises(ValueError):
+        FailureSchedule([(1.0, 0)], repair_s=-1.0)
+    with pytest.raises(ValueError):
+        FailureSchedule([(-1.0, 0)])
+    with pytest.raises(ValueError):
+        FailureSchedule.poisson(seed=0, mtbf_s=0.0, n_targets=1,
+                                horizon_s=1.0)
+    a = FailureSchedule.poisson(seed=7, mtbf_s=3.0, n_targets=4,
+                                horizon_s=50.0, repair_s=1.0)
+    b = FailureSchedule.poisson(seed=7, mtbf_s=3.0, n_targets=4,
+                                horizon_s=50.0, repair_s=1.0)
+    c = FailureSchedule.poisson(seed=8, mtbf_s=3.0, n_targets=4,
+                                horizon_s=50.0, repair_s=1.0)
+    assert a.failures == b.failures and a.failures != c.failures
+    assert all(0.0 <= t < 50.0 for t, _ in a.failures)
+    capped = FailureSchedule.poisson(seed=7, mtbf_s=3.0, n_targets=4,
+                                     horizon_s=50.0, repair_s=1.0,
+                                     max_failures=3)
+    assert capped.failures == a.failures[:3]
+
+
+def test_failure_schedule_rides_the_runtime():
+    runtime = ClusterRuntime(ClusterState.homogeneous(
+        1, ResourceVector(hbm=1.0)))
+    plan = FailureSchedule([(1.0, 0), (4.0, 1), (2.0, 7)], repair_s=0.5)
+    events = []
+    plan.attach(runtime,
+                on_fail=lambda t, i: events.append(("fail", t, i)),
+                on_repair=lambda t, i: events.append(("repair", t, i)),
+                n_targets=2)      # target 7 is out of range: dropped
+    runtime.run()
+    assert events == [("fail", 1.0, 0), ("repair", 1.5, 0),
+                      ("fail", 4.0, 1), ("repair", 4.5, 1)]
+    assert plan.n_failed == 2 and plan.n_repaired == 2
+
+
+# --- Autoscaler ------------------------------------------------------------
+
+def test_autoscaler_validation():
+    with pytest.raises(ValueError):
+        Autoscaler(max_replicas=2, min_replicas=3)
+    with pytest.raises(ValueError):
+        Autoscaler(max_replicas=0)
+    with pytest.raises(ValueError):
+        Autoscaler(max_replicas=2, interval_s=0.0)
+    with pytest.raises(ValueError):
+        Autoscaler(max_replicas=2, sustain=0)
+
+
+def test_autoscaler_sustained_trends():
+    a = Autoscaler(max_replicas=4, min_replicas=1, sustain=3,
+                   scale_up_queue=4.0, scale_down_queue=0.5)
+    # one bursty sample never flaps the fleet
+    assert a.observe(0.0, queue_depth=100.0, active=1) == "hold"
+    assert a.observe(1.0, queue_depth=0.0, active=1) == "hold"
+    # three SUSTAINED hot samples -> up, and the streak resets
+    for i in range(2):
+        assert a.observe(2.0 + i, queue_depth=20.0, active=1) == "hold"
+    assert a.observe(4.0, queue_depth=20.0, active=1) == "up"
+    assert a.observe(5.0, queue_depth=20.0, active=2) == "hold"
+    # at the ceiling, pressure cannot scale further
+    for i in range(6):
+        assert a.observe(6.0 + i, queue_depth=99.0, active=4) == "hold"
+    # calm samples above the floor -> down after sustain
+    assert a.observe(20.0, queue_depth=0.0, active=2) == "hold"
+    assert a.observe(21.0, queue_depth=0.0, active=2) == "hold"
+    assert a.observe(22.0, queue_depth=0.0, active=2) == "down"
+    # at the floor, calm holds
+    assert all(a.observe(30.0 + i, queue_depth=0.0, active=1) == "hold"
+               for i in range(6))
+
+
+def test_autoscaler_slo_floor_triggers_up():
+    a = Autoscaler(max_replicas=2, sustain=2, slo_floor=0.9)
+    for _ in range(8):
+        a.observe_finished(False)
+    assert a.attainment() < 0.9
+    assert a.observe(0.0, queue_depth=0.0, active=1) == "hold"
+    assert a.observe(1.0, queue_depth=0.0, active=1) == "up"
+
+
+def test_pick_spawn_node():
+    assert pick_spawn_node([]) is None
+    assert pick_spawn_node([3, 1, 2]) == 1      # no topology: lowest id
+    from repro.sched import get_topology
+    topo = get_topology("two-rack", nodes=4)
+    picked = pick_spawn_node([1, 3], topo)
+    assert picked in (1, 3)
+    # deterministic across calls
+    assert pick_spawn_node([1, 3], topo) == picked
+
+
+# --- the simulator seam ----------------------------------------------------
+
+def _sim_arrivals(apps, n=16, rate=0.05, seed=5, tenant_of=None):
+    from repro.sched.arrivals import sample_input_size
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    sizes = {"small": 0.5, "medium": 0.5, "large": 0.0}
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        app = apps[int(rng.choice(len(apps)))]
+        out.append(Arrival(t, app, sample_input_size(rng, sizes),
+                           tenant=tenant_of(i) if tenant_of else None))
+    return out
+
+
+def _run_sim(apps, moe, *, elastic=None, failure_plan=None, seed=3,
+             n=12, hosts=4, mem=10.0, arrivals=None, spawn_spy=None):
+    cfg = SimConfig(n_hosts=hosts, host_mem_gb=mem, tasks_per_slot=2,
+                    elastic=elastic, failure_plan=failure_plan)
+    pol = OursPolicy(estimator=get_estimator("moe", predictor=moe))
+    sim = Simulator(None, pol, cfg, seed=seed,
+                    arrivals=arrivals if arrivals is not None
+                    else _sim_arrivals(spilly(apps), n=n))
+    if spawn_spy is not None:
+        orig = sim._spawn
+        def wrapped(job, host, *a, **kw):
+            spawn_spy(sim, job, host)
+            return orig(job, host, *a, **kw)
+        sim._spawn = wrapped
+    out = sim.run()
+    out["_sim"] = sim
+    return out
+
+
+def _strip(out):
+    return {k: v for k, v in out.items()
+            if k in ("stp", "antt", "oom_count", "finish_times",
+                     "unfinished")}
+
+
+def test_sim_empty_failure_plan_is_bit_identical(suite):
+    """Attaching the machinery with NOTHING planned must not perturb
+    the schedule: the plan draws from its own RNG at construction and
+    injects zero events."""
+    apps, moe = suite
+    base = _run_sim(apps, moe)
+    wired = _run_sim(apps, moe,
+                     failure_plan=FailureSchedule([], repair_s=1.0))
+    assert _strip(base) == _strip(wired)
+
+
+def test_sim_failure_plan_releases_claims_and_repairs(suite):
+    """Deterministic fail: every executor claim on the downed host is
+    released (stale-claim release), the job's non-checkpointed work
+    requeues, and the repair re-admits the host into the scan."""
+    apps, moe = suite
+    plan = FailureSchedule.poisson(seed=9, mtbf_s=800.0, n_targets=4,
+                                   horizon_s=4000.0, repair_s=150.0)
+    assert plan.failures       # the seed actually draws events
+    out = _run_sim(apps, moe, failure_plan=plan, seed=6)
+    sim = out["_sim"]
+    assert plan.n_failed >= 1 and plan.n_repaired == plan.n_failed
+    assert out["unfinished"] == 0        # repair re-admitted the work
+    for h in sim.hosts:                  # no stale claims at drain
+        assert not h.execs
+        assert h.up
+    # identical plan + seed -> identical run
+    plan2 = FailureSchedule.poisson(seed=9, mtbf_s=800.0, n_targets=4,
+                                    horizon_s=4000.0, repair_s=150.0)
+    out2 = _run_sim(apps, moe, failure_plan=plan2, seed=6)
+    assert _strip(out) == _strip(out2)
+
+
+def test_sim_fail_handler_drops_claims_immediately(suite):
+    """Right after the efail handler runs, the downed host holds no
+    executors and no booked capacity — the invariant the dispatcher
+    relies on to skip it."""
+    apps, moe = suite
+    plan = FailureSchedule.poisson(seed=9, mtbf_s=800.0, n_targets=4,
+                                   horizon_s=4000.0, repair_s=150.0)
+    cfg = SimConfig(n_hosts=4, host_mem_gb=10.0, tasks_per_slot=2,
+                    failure_plan=plan)
+    pol = OursPolicy(estimator=get_estimator("moe", predictor=moe))
+    sim = Simulator(None, pol, cfg, seed=6,
+                    arrivals=_sim_arrivals(spilly(apps), n=12))
+    seen = []
+    orig = sim._fail_host
+    def spy(t, idx):
+        orig(t, idx)
+        host = sim.hosts[idx]
+        assert not host.up and not host.node.up
+        assert not host.execs
+        seen.append(idx)
+    sim._fail_host = spy
+    sim.run()
+    assert seen                          # the spy actually fired
+
+
+def test_sim_legacy_poisson_failures_conserve_work(suite):
+    """Satellite: the LEGACY fail/repair channel (Poisson re-arm from
+    the simulator RNG) still drains every job, releases claims, and
+    stays seeded-deterministic."""
+    apps, moe = suite
+    cfg = SimConfig(n_hosts=4, host_mem_gb=10.0, tasks_per_slot=2,
+                    failures=True, host_mtbf_s=900.0,
+                    repair_time_s=100.0)
+    pol = OursPolicy(estimator=get_estimator("moe", predictor=moe))
+    arrivals = _sim_arrivals(spilly(apps), n=10)
+    out = Simulator(None, pol, cfg, seed=2, arrivals=arrivals).run()
+    assert out["unfinished"] == 0
+    pol2 = OursPolicy(estimator=get_estimator("moe", predictor=moe))
+    out2 = Simulator(None, pol2, cfg, seed=2, arrivals=arrivals).run()
+    assert _strip(out) == _strip(out2)
+
+
+def test_sim_elastic_shrink_fires_and_completes(suite):
+    """With the controller bound and memory scarce, at least one
+    executor spawns on a shrunken grant (telemetry counter) and the
+    stream still drains — the slowdown is charged, not dropped."""
+    apps, moe = suite
+    arrivals = _sim_arrivals(spilly(apps), n=20, rate=0.06, seed=5)
+    rigid = _run_sim(apps, moe, arrivals=arrivals, mem=10.0)
+    el = _run_sim(apps, moe, arrivals=arrivals, mem=10.0,
+                  elastic=ElasticController(max_slowdown=2.9))
+    shrunk = int(el["_sim"].telemetry.counters.get("elastic.shrink", 0))
+    assert shrunk >= 1
+    assert int(rigid["_sim"].telemetry.counters.get(
+        "elastic.shrink", 0)) == 0
+    assert el["unfinished"] == 0
+
+
+def test_sim_tenant_drf_interleaves_scan(suite):
+    """Satellite: the host-scan DRF interleave — with tenant "a"
+    flooding the queue ahead of tenant "b", ``_tenant_order`` hands
+    "b" the second scan slot (progressive filling charges "a" for its
+    first grant) instead of draining "a" FIFO-style."""
+    from types import SimpleNamespace
+    apps, moe = suite
+    pol = OursPolicy(estimator=get_estimator("moe", predictor=moe))
+    fn = MemoryFunction("affine", 0.5, 0.1)
+    def job(tenant):
+        return SimpleNamespace(tenant=tenant, unassigned=40.0,
+                               items=40.0, fn_hat=fn)
+    jobs = [job("a") for _ in range(5)] + [job("b"), job("b")]
+    sim = SimpleNamespace(
+        cfg=SimConfig(n_hosts=2, host_mem_gb=10.0),
+        hosts=[SimpleNamespace(execs=[]) for _ in range(2)])
+    order = [j.tenant for j in pol._tenant_order(sim, jobs)]
+    assert len(order) == len(jobs)
+    assert sorted(order) == sorted(j.tenant for j in jobs)
+    assert order[0] == "a" and "b" in order[:2], order
+    # untenanted jobs form their own pseudo-tenant and interleave too
+    mixed = [job("a"), job("a"), job(None)]
+    order2 = [j.tenant for j in pol._tenant_order(sim, mixed)]
+    assert None in order2[:2], order2
+
+
+def test_sim_tenant_arrivals_thread_to_jobs(suite):
+    """Tenants declared on Arrivals land on the spawned jobs' claims
+    (the accounting the interleave charges against) and the stream
+    still drains."""
+    apps, moe = suite
+    pool = spilly(apps)
+    from repro.sched.arrivals import sample_input_size
+    rng = np.random.default_rng(0)
+    sizes = {"small": 1.0}
+    arrivals = [Arrival(0.1 * i, pool[i % len(pool)],
+                        sample_input_size(rng, sizes),
+                        tenant=("a" if i % 2 == 0 else "b"))
+                for i in range(6)]
+    seen = set()
+    def spy(sim, job, host):
+        seen.add(job.tenant)
+    out = _run_sim(apps, moe, arrivals=arrivals, spawn_spy=spy)
+    assert out["unfinished"] == 0
+    assert seen == {"a", "b"}
+
+
+# --- the engine seam -------------------------------------------------------
+
+def _srv_demand(shrink=None):
+    return ServingDemand(weights_gb=0.5, kv_gb_per_token=2e-4,
+                         shrink=shrink)
+
+
+def test_engine_flags_off_no_elastic_section():
+    reqs = make_requests(8, seed=1)
+    s = Engine(reqs, _srv_demand(), 1.0, mode="continuous",
+               max_batch=8).run()
+    assert "elastic" not in s
+
+
+def test_engine_empty_failure_plan_identical():
+    reqs = make_requests(8, seed=1)
+    base = Engine(reqs, _srv_demand(), 1.0, mode="continuous",
+                  max_batch=8).run()
+    wired = Engine(make_requests(8, seed=1), _srv_demand(), 1.0,
+                   mode="continuous", max_batch=8,
+                   failures=FailureSchedule([], repair_s=0.1)).run()
+    for k in ("goodput_tok_s", "slo_goodput_tok_s", "completed",
+              "preemptions", "node_steps"):
+        assert base[k] == wired[k], k
+
+
+def test_engine_rejects_elastic_on_wave():
+    for kw in ({"elastic": ElasticController()},
+               {"failures": FailureSchedule([])},
+               {"autoscaler": Autoscaler(max_replicas=2)}):
+        with pytest.raises(ValueError, match="continuous"):
+            Engine(make_requests(4), _srv_demand(), 1.0, mode="wave",
+                   **kw)
+
+
+def test_engine_replica_failure_drains_and_repairs():
+    reqs = make_requests(12, seed=3, rate=40.0)
+    plan = FailureSchedule([(0.05, 0)], repair_s=0.2)
+    eng = Engine(reqs, _srv_demand(), 1.0, mode="continuous",
+                 max_batch=8, replicas=2, router="least-loaded",
+                 failures=plan)
+    s = eng.run()
+    assert s["completed"] == len(reqs)   # drained work finishes
+    ev = s["elastic"]["replica_events"]
+    assert ev["fail"] == 1 and ev["repair"] == 1
+    # deterministic replay
+    s2 = Engine(make_requests(12, seed=3, rate=40.0), _srv_demand(),
+                1.0, mode="continuous", max_batch=8, replicas=2,
+                router="least-loaded",
+                failures=FailureSchedule([(0.05, 0)],
+                                         repair_s=0.2)).run()
+    assert s["goodput_tok_s"] == s2["goodput_tok_s"]
+    assert s["node_steps"] == s2["node_steps"]
+
+
+def test_engine_autoscaler_scales_up_under_burst():
+    rng = np.random.default_rng(4)
+    t, reqs = 0.0, []
+    for i in range(24):
+        t += float(rng.exponential(1.0 / (60.0 if i >= 4 else 8.0)))
+        reqs.append(Request(rid=i, prompt_len=16, max_new_tokens=16,
+                            arrival=t, ttft_deadline=0.2,
+                            tpot_deadline=0.05))
+    auto = Autoscaler(max_replicas=3, min_replicas=1, interval_s=0.05,
+                      sustain=2)
+    eng = Engine(reqs, _srv_demand(), 0.6, mode="continuous",
+                 max_batch=4, replicas=1, router="least-loaded",
+                 autoscaler=auto)
+    s = eng.run()
+    assert s["completed"] == len(reqs)
+    assert s["elastic"]["replica_events"].get("scale_up", 0) >= 1
+    # spares ran real steps once flipped live
+    assert len([n for n, c in s["node_steps"].items() if c > 0]) >= 2
+
+
+def test_engine_shrunken_joins_book_within_budget():
+    reqs = make_requests(10, seed=6, rate=50.0, prompt=(24, 40),
+                         new=(24, 40))
+    demand = _srv_demand(
+        shrink=SlowdownCurve.linear(1.6, min_fraction=0.5))
+    full_ctx = 40 + 40
+    budget = 0.5 + 2e-4 * full_ctx * 2.0     # ~2 full joins of KV
+    eng = Engine(reqs, demand, budget, mode="continuous", max_batch=8,
+                 elastic=ElasticController(max_slowdown=2.0))
+    s = eng.run()
+    assert s["completed"] == len(reqs)
+    assert s["elastic"]["shrunk_joins"] >= 1
+    for dec in eng.metrics.steps:
+        assert dec.booked.fits(dec.budget) or dec.forced
+
+
+def test_batcher_shrink_plan_direct():
+    """The batcher-level contract: a join that does not fit at full KV
+    is admitted at a priced fraction, the grant is frozen, and the
+    booked footprint stays within budget."""
+    demand = ServingDemand(
+        weights_gb=0.0, kv_gb_per_token=0.01,
+        shrink=SlowdownCurve.linear(2.0, min_fraction=0.5))
+    budget = ResourceVector(hbm=1.5)     # one full 1.0 GB join + half
+    b = ContinuousBatcher(demand, budget, max_batch=4,
+                          elastic=ElasticController(max_slowdown=2.5))
+    pending = [Request(rid=i, prompt_len=50, max_new_tokens=50,
+                       arrival=0.0) for i in range(3)]
+    dec = b.plan_step([], pending, now=0.0, step=0)
+    assert dec.shrunk, dec
+    rid, frac, slow = dec.shrunk[0]
+    assert 0.5 <= frac < 1.0 and 1.0 < slow <= 2.5
+    assert dec.booked.fits(dec.budget)
+    # applying the grant freezes it
+    b.register_shrunk(pending[0], frac, slow)
+    assert pending[0].rid in b.shrunk
+
+
+# --- tenancy half-life -----------------------------------------------------
+
+def test_tenant_halflife_validation_and_default_identity():
+    with pytest.raises(ValueError):
+        Tenant("a", credit_halflife_s=0.0)
+    win = TenantRegistry([Tenant("a")], window=16)
+    exp = TenantRegistry([Tenant("a", credit_halflife_s=None)],
+                         window=16)
+    rng = np.random.default_rng(2)
+    for i in range(24):
+        ok = bool(rng.random() < 0.7)
+        ratio = float(rng.uniform(0.2, 1.5))
+        for reg in (win, exp):
+            reg.observe_slo("a", ok, now=float(i))
+            reg.observe_latency_ratio("a", ratio, now=float(i))
+    assert win.credit("a") == exp.credit("a")
+
+
+@pytest.mark.slow
+def test_elastic_bench_acceptance_end_to_end():
+    """Tier-2: the full acceptance bench (both cells, strict bars) —
+    the diurnal+failures simulator cell and the burst+failures serving
+    cell both hold their strict wins."""
+    from benchmarks import elastic_bench
+    payload = elastic_bench.main()     # raises on any failed bar
+    assert payload["sim"]["stp_ratio"] > 1.0
+    assert payload["serving"]["slo_ratio"] > 1.0
+
+
+@pytest.mark.slow
+def test_engine_failure_churn_long(suite):
+    """Tier-2: many fail/repair cycles across a 3-replica fleet under
+    a sustained stream — every request still completes and the event
+    ledger stays balanced."""
+    reqs = make_requests(60, seed=8, rate=30.0)
+    plan = FailureSchedule.poisson(seed=13, mtbf_s=0.4, n_targets=3,
+                                   horizon_s=3.0, repair_s=0.15)
+    s = Engine(reqs, _srv_demand(), 1.0, mode="continuous",
+               max_batch=8, replicas=3, router="least-loaded",
+               failures=plan).run()
+    assert s["completed"] == len(reqs)
+    ev = s["elastic"]["replica_events"]
+    assert ev.get("fail", 0) >= 2
+    assert ev.get("repair", 0) == ev.get("fail", 0)
+
+
+def test_tenant_halflife_forgives_old_burst():
+    """An early bad burst followed by sustained good behaviour: the
+    half-life tenant's credit recovers ABOVE the hard-window tenant's
+    while the burst is still inside the window."""
+    win = TenantRegistry([Tenant("a")], window=64)
+    exp = TenantRegistry([Tenant("a", credit_halflife_s=5.0)],
+                         window=64)
+    for i in range(8):                     # the bad burst at t ~ 0
+        win.observe_slo("a", False, now=float(i) * 0.1)
+        exp.observe_slo("a", False, now=float(i) * 0.1)
+    for i in range(24):                    # sustained good behaviour
+        t = 10.0 + float(i)
+        win.observe_slo("a", True, now=t)
+        exp.observe_slo("a", True, now=t)
+    assert exp.credit("a") > win.credit("a")
+    # and decay is monotone: more good time -> more credit
+    before = exp.credit("a")
+    for i in range(8):
+        exp.observe_slo("a", True, now=40.0 + float(i))
+    assert exp.credit("a") >= before
